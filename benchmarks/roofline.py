@@ -1,0 +1,105 @@
+"""Roofline analysis (deliverable g): read artifacts/dryrun JSONs, derive
+the three terms per (arch × shape × mesh), name the bottleneck.
+
+  compute_s    = HLO_FLOPs/device   / 197e12   (TPU v5e bf16 peak)
+  memory_s     = HLO_bytes/device   / 819e9    (HBM BW)
+  collective_s = wire_bytes/device  / 50e9     (ICI per-link)
+
+roofline_fraction = compute_s / max(all three): the fraction of peak the
+cell can reach if the dominant term is perfectly pipelined.  The
+MODEL/HLO-flops ratio flags remat and redundant-compute waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_ratio: float = 0.0
+    skipped: str = ""
+    error: str = ""
+    raw: Optional[dict] = None
+
+    @property
+    def bottleneck(self) -> str:
+        if self.skipped or self.error:
+            return "-"
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        m = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.compute_s / m if m > 0 else 0.0
+
+
+def load_cells(dryrun_dir: str = "artifacts/dryrun") -> List[Cell]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        c = Cell(rec["arch"], rec["shape"], rec["mesh"],
+                 skipped=rec.get("skipped", ""), error=rec.get("error", ""),
+                 raw=rec)
+        if not c.skipped and not c.error:
+            n = rec["n_devices"]
+            c.compute_s = rec["flops_per_device"] / PEAK_FLOPS
+            c.memory_s = rec["hbm_bytes_per_device"] / HBM_BW
+            c.collective_s = rec["collective_bytes_per_device"] / ICI_BW
+            c.model_ratio = rec["model_flops_total"] / n / max(
+                rec["flops_per_device"], 1e-9)
+        cells.append(c)
+    return cells
+
+
+def rows(dryrun_dir: str = "artifacts/dryrun"):
+    out = []
+    for c in load_cells(dryrun_dir):
+        tag = f"roofline/{c.arch}/{c.shape}/{c.mesh}"
+        if c.skipped:
+            out.append((tag, 0.0, f"SKIP:{c.skipped[:60]}"))
+        elif c.error:
+            out.append((tag, 0.0, f"ERROR:{c.error[:60]}"))
+        else:
+            out.append((
+                tag, c.roofline_fraction,
+                f"bottleneck={c.bottleneck} compute={c.compute_s:.3f}s "
+                f"mem={c.memory_s:.3f}s coll={c.collective_s:.3f}s "
+                f"model/hlo={c.model_ratio:.2f}"))
+    return out
+
+
+def table(dryrun_dir: str = "artifacts/dryrun", mesh: str = "single") -> str:
+    lines = [f"| arch | shape | compute s | memory s | collective s | "
+             f"bottleneck | roofline frac | model/HLO |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(dryrun_dir):
+        if c.mesh != mesh:
+            continue
+        if c.skipped:
+            lines.append(f"| {c.arch} | {c.shape} | — | — | — | skipped | — | — |")
+            continue
+        lines.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.4f} | {c.memory_s:.4f} "
+            f"| {c.collective_s:.4f} | {c.bottleneck} "
+            f"| {c.roofline_fraction:.3f} | {c.model_ratio:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

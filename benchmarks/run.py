@@ -1,0 +1,41 @@
+"""Benchmark entry point: one function per paper table/figure + the
+framework's roofline + checkpoint-commit benches.
+
+Prints ``name,value,derived`` CSV (value is ms / ratio / fraction as the
+name indicates).  ``python -m benchmarks.run [--quick]``.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench name")
+    ap.add_argument("--dryrun-dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from . import paper_figs, roofline, ckpt_bench
+
+    benches = [(f.__name__, f) for f in paper_figs.ALL]
+    benches.append(("ckpt_commit", ckpt_bench.run))
+    benches.append(("roofline", lambda: roofline.rows(args.dryrun_dir)))
+
+    print("name,value,derived")
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # report, keep going
+            print(f"{name},ERROR,{e!r}"[:300])
+            continue
+        for rname, val, derived in rows:
+            print(f"{rname},{val:.4f},{derived}")
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `benchmarks` (and `repro` when PYTHONPATH is missing) importable
+# regardless of how pytest is invoked.
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

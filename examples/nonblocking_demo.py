@@ -1,0 +1,32 @@
+"""The paper's headline failure case, side by side (Fig 2b vs Fig 4a):
+coordinator dies after collecting votes, before sending any decision.
+
+2PC participants block forever; Cornus participants resolve through the
+storage-level termination protocol in ~2 storage RTTs.
+
+Run:  PYTHONPATH=src python examples/nonblocking_demo.py
+"""
+from repro.core import (AZURE_REDIS, Cluster, Decision, ProtocolConfig, Sim,
+                        SimStorage, TxnSpec)
+
+NODES = ["n0", "n1", "n2", "n3"]
+
+for proto in ("2pc", "cornus"):
+    sim = Sim()
+    cluster = Cluster(sim, SimStorage(sim, AZURE_REDIS, seed=7), NODES,
+                      ProtocolConfig(protocol=proto))
+    cluster.fail("n0", 1.0)   # dies before any vote lands — decision unsent
+    cluster.run_txn(TxnSpec(txn_id="t", coordinator="n0",
+                            participants=NODES))
+    sim.run(until=120_000)
+
+    print(f"--- {proto} ---")
+    for n in NODES[1:]:
+        st = cluster.local.get((n, "t"), {})
+        d = st.get("decision")
+        blocked = cluster.blocked.get(("t", n), False)
+        out = cluster.outcomes.get(("t", n))
+        t_ms = f"{out.termination_ms:.2f} ms" if out and out.ran_termination \
+            else "-"
+        print(f"  {n}: decision={d.value if d else 'BLOCKED':9s} "
+              f"blocked={blocked} termination={t_ms}")

@@ -1,0 +1,16 @@
+"""Cornus-committed distributed checkpointing (the paper → framework bridge).
+
+A checkpoint epoch is a distributed transaction: every host uploads its shard
+set to disaggregated storage, then CAS-writes VOTE-YES into its transaction-
+state slot via LogOnce().  The epoch is committed iff ALL hosts' votes are
+durable — no coordinator decision record exists (paper §3.1), so a dead
+coordinator can never wedge the fleet, and any host (or a restarting job) can
+resolve an in-flight epoch in bounded time with the termination protocol.
+"""
+from .shards import pack_tree, partition_leaves, unpack_tree
+from .commit import CheckpointOutcome, CornusCheckpointer
+from .restore import latest_committed, restore_params
+
+__all__ = ["pack_tree", "unpack_tree", "partition_leaves",
+           "CornusCheckpointer", "CheckpointOutcome", "latest_committed",
+           "restore_params"]

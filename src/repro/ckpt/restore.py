@@ -1,0 +1,66 @@
+"""Non-blocking restore: find the newest COMMITTED epoch and load it.
+
+A restarting fleet must never block on an epoch left in-flight by a crash
+(the 2PC failure mode in paper Fig 2b).  ``latest_committed`` walks epochs
+newest-first; UNDETERMINED epochs are *resolved* — not waited on — with the
+termination protocol, which either confirms the collective COMMIT or forces
+ABORT in bounded time (Theorem 4).  Elasticity: shards are reassembled from
+whatever host partitioning wrote them, so the restored fleet size may differ
+from the writing fleet.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.state import Decision
+from .commit import CornusCheckpointer, _txn
+from .shards import merge_into_tree, unpack_tree
+
+
+def list_epochs(store, hosts: Sequence[str]) -> List[int]:
+    """All epoch ids any host has a state record for (FileStore layout)."""
+    seen = set()
+    root = getattr(store, "root", None)
+    if root is not None:
+        for h in hosts:
+            d = os.path.join(root, "state", h)
+            if os.path.isdir(d):
+                for name in os.listdir(d):
+                    m = re.fullmatch(r"e(\d+)", name)
+                    if m:
+                        seen.add(int(m.group(1)))
+    else:  # MemoryStore
+        for (partition, txn), _ in store.snapshot().items():
+            m = re.fullmatch(r"e(\d+)", txn)
+            if m:
+                seen.add(int(m.group(1)))
+    return sorted(seen, reverse=True)
+
+
+def latest_committed(store, hosts: Sequence[str],
+                     resolver_host: str = "restore") -> Optional[int]:
+    ck = CornusCheckpointer(store, resolver_host, hosts)
+    for epoch in list_epochs(store, hosts):
+        d = ck.global_decision(epoch)
+        if d == Decision.UNDETERMINED:
+            # In-flight epoch from a crashed run: resolve, don't wait.
+            d, _ = ck.terminate(epoch)
+        if d == Decision.COMMIT:
+            return epoch
+    return None
+
+
+def restore_params(store, hosts: Sequence[str], epoch: int, template):
+    """Reassemble the full tree from every host's shard payload."""
+    flat: Dict[str, np.ndarray] = {}
+    for h in hosts:
+        try:
+            payload = store.get_data(h, _txn(epoch))
+        except FileNotFoundError:
+            continue
+        flat.update(unpack_tree(payload))
+    return merge_into_tree(template, flat)

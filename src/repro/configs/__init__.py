@@ -1,0 +1,50 @@
+"""Assigned-architecture registry: ``get_config(arch_id)``.
+
+Each module defines ``CONFIG`` (exact published numbers, see per-file source
+notes) — smoke tests use ``repro.models.config.smoke(CONFIG)``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "minicpm_2b",
+    "llama3_2_1b",
+    "gemma3_4b",
+    "gemma2_2b",
+    "kimi_k2_1t_a32b",
+    "qwen3_moe_235b_a22b",
+    "qwen2_vl_72b",
+    "musicgen_medium",
+    "xlstm_125m",
+    "jamba_v0_1_52b",
+]
+
+# CLI ids use dashes / dots; module names use underscores.
+ALIASES = {
+    "minicpm-2b": "minicpm_2b",
+    "llama3.2-1b": "llama3_2_1b",
+    "gemma3-4b": "gemma3_4b",
+    "gemma2-2b": "gemma2_2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "musicgen-medium": "musicgen_medium",
+    "xlstm-125m": "xlstm_125m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCH_IDS and mod_name != "cornus_ycsb":
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,24 @@
+"""Cornus atomic commit — the paper's core contribution.
+
+Public surface:
+  state      – Vote / Decision / TxnSpec / global_decision (Def. 1)
+  storage    – MemoryStore / FileStore / SimStorage + latency models
+  protocol   – Cluster (Cornus + 2PC, termination protocols, recovery)
+  variants   – CoordinatorLogCluster, Table-3 RTT model
+  sim        – deterministic discrete-event kernel
+"""
+from .sim import Sim
+from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
+from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
+                      COMPUTE_RTT_MS, SLOW_REDIS, FileStore, LatencyModel,
+                      MemoryStore, SimStorage)
+from .protocol import Cluster, ProtocolConfig
+from .variants import CoordinatorLogCluster, predicted_caller_latency_ms, rtt_table
+
+__all__ = [
+    "Sim", "Decision", "TxnOutcome", "TxnSpec", "Vote", "global_decision",
+    "MemoryStore", "FileStore", "SimStorage", "LatencyModel",
+    "AZURE_REDIS", "AZURE_BLOB", "AZURE_BLOB_SEPARATE_ACL", "SLOW_REDIS",
+    "COMPUTE_RTT_MS", "Cluster", "ProtocolConfig", "CoordinatorLogCluster",
+    "rtt_table", "predicted_caller_latency_ms",
+]

@@ -1,0 +1,272 @@
+"""Disaggregated storage layer: Log() / LogOnce() over pluggable stores.
+
+The paper's only storage-layer requirement is *log-once* semantics built on a
+compare-and-swap primitive (§3.2, §4).  Three stores implement it here:
+
+  * ``MemoryStore``  – lock-protected dict; used by the discrete-event sim and
+    by threaded integration tests (stands in for Azure Redis / Blob).
+  * ``FileStore``    – directory-backed; ``open(O_CREAT|O_EXCL)`` is the CAS
+    (create-if-absent ≙ Azure Blob "If-None-Match:*" conditional PUT).  Used
+    by the training framework's Cornus checkpoint commit.
+  * ``LatencyModel`` – deterministic latency sampler with the paper's measured
+    service times (§5.1.2), used only in simulation.
+
+Every store exposes the same three operations on the *transaction-state* log:
+
+  log_once(partition, txn, state) -> resulting state   (CAS; first write wins)
+  log(partition, txn, state)      -> resulting state   (blind append; 2PC path)
+  read_state(partition, txn)      -> state | None
+
+User-data logging (the execution-phase writes that 2PC piggybacks on prepare)
+is modelled as an opaque byte-count via ``log_data`` — access-control
+separation between data and txn-state (§4) is what the ``acl`` flag models.
+"""
+from __future__ import annotations
+
+import os
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from .state import Vote
+
+
+# --------------------------------------------------------------------------
+# Latency models (paper §5.1.2 measurements, in milliseconds)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LatencyModel:
+    """Service-time model for one storage deployment."""
+
+    name: str
+    conditional_write_ms: float   # LogOnce() mean
+    plain_write_ms: float         # Log() mean
+    read_ms: float                # state read mean
+    jitter: float = 0.05          # lognormal-ish multiplicative spread
+    # Separate-ACL deployments (Azure Blob §4.2) need TWO sequential requests
+    # for LogOnce-with-data: data PUT then conditional state PUT.
+    separate_acl: bool = False
+    # Service-time growth per extra record in a batched write (coordinator-log
+    # variant §5.6 ships ALL participants' redo data in one request).
+    batch_size_factor: float = 0.15
+
+    def sample(self, rng: random.Random, mean_ms: float) -> float:
+        # Deterministic multiplicative jitter; heavy-ish right tail like the
+        # paper's P99 plots (Fig 5/6) without a full trace model.
+        u = rng.random()
+        tail = 1.0 + (3.0 * rng.random() if u > 0.97 else 0.0)
+        return mean_ms * (1.0 + self.jitter * (2.0 * rng.random() - 1.0)) * tail
+
+
+AZURE_REDIS = LatencyModel("redis", conditional_write_ms=1.96,
+                           plain_write_ms=1.84, read_ms=0.9)
+AZURE_BLOB = LatencyModel("blob", conditional_write_ms=10.40,
+                          plain_write_ms=10.29, read_ms=5.0)
+# §5.1.4: separate ACLs for txn-state vs user data raise LogOnce from
+# 10.40ms to 18.43ms (two sequential requests).
+AZURE_BLOB_SEPARATE_ACL = LatencyModel(
+    "blob-acl", conditional_write_ms=18.43, plain_write_ms=10.29,
+    read_ms=5.0, separate_acl=True)
+# §5.6 coordinator-log experiment measured ~443ms writes ("such high latency
+# of writing to Redis" — a heavily loaded/cross-region instance).
+SLOW_REDIS = LatencyModel("slow-redis", conditional_write_ms=443.0,
+                          plain_write_ms=443.0, read_ms=221.0)
+
+COMPUTE_RTT_MS = 0.5  # measured compute↔compute round trip (§5.1.2)
+
+
+# --------------------------------------------------------------------------
+# Stores
+# --------------------------------------------------------------------------
+class MemoryStore:
+    """Thread-safe CAS store holding per-partition transaction-state logs."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        # (partition, txn) -> (state, writer)
+        self._state: Dict[Tuple[str, str], Tuple[Vote, str]] = {}
+        self._data_bytes: Dict[str, int] = {}
+        self.cas_attempts = 0
+        self.cas_losses = 0
+
+    def log_once(self, partition: str, txn: str, state: Vote,
+                 writer: str = "") -> Vote:
+        with self._lock:
+            self.cas_attempts += 1
+            key = (partition, txn)
+            if key in self._state:
+                self.cas_losses += 1
+                return self._state[key][0]
+            self._state[key] = (state, writer)
+            return state
+
+    def log(self, partition: str, txn: str, state: Vote,
+            writer: str = "") -> Vote:
+        with self._lock:
+            # Blind append: last record wins, but a decision record never
+            # regresses to a vote (append-only log read returns the newest
+            # *decision* if present — matches 2PC recovery reads).
+            key = (partition, txn)
+            cur = self._state.get(key)
+            if cur is not None and cur[0].is_decision() and not state.is_decision():
+                return cur[0]
+            self._state[key] = (state, writer)
+            return state
+
+    def read_state(self, partition: str, txn: str) -> Optional[Vote]:
+        with self._lock:
+            cur = self._state.get((partition, txn))
+            return cur[0] if cur else None
+
+    def writer_of(self, partition: str, txn: str) -> Optional[str]:
+        with self._lock:
+            cur = self._state.get((partition, txn))
+            return cur[1] if cur else None
+
+    def log_data(self, partition: str, nbytes: int) -> None:
+        with self._lock:
+            self._data_bytes[partition] = self._data_bytes.get(partition, 0) + nbytes
+
+    def snapshot(self) -> Dict[Tuple[str, str], Vote]:
+        with self._lock:
+            return {k: v[0] for k, v in self._state.items()}
+
+
+class FileStore:
+    """Directory-backed store: O_CREAT|O_EXCL create-if-absent is the CAS.
+
+    Layout:  <root>/state/<partition>/<txn>            (one small state file)
+             <root>/data/<partition>/<name>            (bulk shard payloads)
+
+    This is the deployment target for the checkpoint committer: the directory
+    stands in for a blob container; partitions are per-host prefixes and the
+    ACL separation of §4 maps to the state/ vs data/ prefixes.
+    """
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(os.path.join(root, "state"), exist_ok=True)
+        os.makedirs(os.path.join(root, "data"), exist_ok=True)
+
+    def _state_path(self, partition: str, txn: str) -> str:
+        d = os.path.join(self.root, "state", partition)
+        os.makedirs(d, exist_ok=True)
+        return os.path.join(d, txn)
+
+    def log_once(self, partition: str, txn: str, state: Vote,
+                 writer: str = "") -> Vote:
+        path = self._state_path(partition, txn)
+        payload = f"{state.value}\n{writer}\n".encode()
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return self._read(path)
+        try:
+            os.write(fd, payload)
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        return state
+
+    def log(self, partition: str, txn: str, state: Vote,
+            writer: str = "") -> Vote:
+        path = self._state_path(partition, txn)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(f"{state.value}\n{writer}\n".encode())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic overwrite
+        return state
+
+    def _read(self, path: str) -> Vote:
+        with open(path, "rb") as f:
+            return Vote(f.read().decode().splitlines()[0])
+
+    def read_state(self, partition: str, txn: str) -> Optional[Vote]:
+        path = self._state_path(partition, txn)
+        try:
+            return self._read(path)
+        except FileNotFoundError:
+            return None
+
+    # Bulk payloads (checkpoint shards) ------------------------------------
+    def data_path(self, partition: str, name: str) -> str:
+        d = os.path.join(self.root, "data", partition)
+        os.makedirs(d, exist_ok=True)
+        return os.path.join(d, name)
+
+    def put_data(self, partition: str, name: str, payload: bytes) -> str:
+        path = self.data_path(partition, name)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return path
+
+    def get_data(self, partition: str, name: str) -> bytes:
+        with open(self.data_path(partition, name), "rb") as f:
+            return f.read()
+
+
+# --------------------------------------------------------------------------
+# Simulated storage service: MemoryStore semantics + LatencyModel timing
+# --------------------------------------------------------------------------
+class SimStorage:
+    """Storage service as seen from inside the discrete-event simulator.
+
+    A request issued at t has its CAS *applied* at t + service/2 (the moment
+    the storage processes it) and its response delivered at t + service.
+    Interleaving of concurrent LogOnce calls is therefore decided by apply
+    times — exactly the data race the paper's termination protocol wins or
+    loses by, and what the hypothesis tests perturb.
+    """
+
+    def __init__(self, sim, model: LatencyModel, seed: int = 0) -> None:
+        self.sim = sim
+        self.model = model
+        self.store = MemoryStore()
+        self.rng = random.Random(seed)
+        self.requests = 0
+
+    # Each returns a sim Event yielding the op's result.
+    def _op(self, service_ms: float, apply_fn):
+        self.requests += 1
+        done = self.sim.event()
+        result = {}
+
+        def apply():
+            result["value"] = apply_fn()
+
+        self.sim._schedule(self.sim.now + service_ms / 2.0, apply)
+        self.sim._schedule(self.sim.now + service_ms,
+                           lambda: done.trigger(result.get("value")))
+        return done
+
+    def log_once(self, partition: str, txn: str, state: Vote, writer: str = ""):
+        ms = self.model.sample(self.rng, self.model.conditional_write_ms)
+        return self._op(ms, lambda: self.store.log_once(partition, txn, state, writer))
+
+    def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
+        ms = self.model.sample(self.rng, self.model.plain_write_ms)
+        return self._op(ms, lambda: self.store.log(partition, txn, state, writer))
+
+    def read_state(self, partition: str, txn: str):
+        ms = self.model.sample(self.rng, self.model.read_ms)
+        return self._op(ms, lambda: self.store.read_state(partition, txn))
+
+    def log_batch(self, partition: str, txn: str, state: Vote, n_records: int,
+                  writer: str = ""):
+        """Coordinator-log variant (§5.6): n records batched in ONE write.
+
+        One request (saves per-write round trips vs 2PC's sequential
+        prepare-then-decision) but the payload carries every participant's
+        redo records, so service time grows with the batch size.
+        """
+        mean = self.model.plain_write_ms * (
+            1.0 + self.model.batch_size_factor * max(0, n_records - 1))
+        ms = self.model.sample(self.rng, mean)
+        return self._op(ms, lambda: self.store.log(partition, txn, state, writer))

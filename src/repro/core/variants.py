@@ -1,0 +1,135 @@
+"""Protocol variants evaluated in §5.6 and Table 3.
+
+* ``CoordinatorLogCluster`` — the coordinator-log (CL) optimization
+  [Stamos & Cristian]: participants reply votes WITHOUT logging; the
+  coordinator batches all participants' logs + its decision into ONE storage
+  write, then replies to the caller.  Faster than 2PC (one batched write vs
+  sequential prepare-then-decision), slower than Cornus (the caller still
+  waits for a storage write), and it violates site autonomy (§5.6).
+
+* ``rtt_table()`` — the analytical RTT model of Table 3 for protocols
+  integrating with Paxos-replicated storage.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .protocol import Cluster, ProtocolConfig
+from .state import Decision, TxnOutcome, TxnSpec, Vote
+
+
+class CoordinatorLogCluster(Cluster):
+    """2PC with centralized (coordinator) logging — §5.6 'CL'."""
+
+    def _coordinator(self, spec: TxnSpec):
+        cfg, sim, me = self.cfg, self.sim, spec.coordinator
+        txn = spec.txn_id
+        t0 = sim.now
+        out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
+
+        if spec.all_read_only and spec.read_only_known_upfront:
+            out.decision = Decision.COMMIT
+            out.caller_latency_ms = 0.0
+            out.done_at_ms = sim.now
+            self._decide(me, txn, Decision.COMMIT)
+            self._record(out)
+            return out
+
+        for p in spec.participants:
+            if p != me:
+                self.send(me, p, txn, "vote-req",
+                          {"participants": list(spec.participants)})
+        pending = [p for p in spec.participants if p != me]
+        waits = [self.wait(me, txn, f"vote:{p}", cfg.vote_timeout_ms)
+                 for p in pending]
+        results = yield self.sim.all_of(waits)
+        prepare_done = sim.now
+        out.prepare_ms = prepare_done - t0
+        my_vote = "VOTE-YES" if spec.vote_of(me) else "ABORT"
+        any_abort = (any(tag == "msg" and val == "ABORT"
+                         for tag, val in results)
+                     or any(tag == "timeout" for tag, val in results)
+                     or my_vote == "ABORT")
+        decision = Decision.ABORT if any_abort else Decision.COMMIT
+
+        # ONE batched write: every participant's redo log + the decision.
+        yield self.storage.log_batch(
+            me, txn, Vote.COMMIT if decision == Decision.COMMIT
+            else Vote.ABORT, n_records=len(spec.participants) + 1, writer=me)
+        if not self.alive(me):
+            return out
+
+        out.decision = decision
+        out.caller_latency_ms = sim.now - t0
+        out.commit_ms = sim.now - prepare_done
+        self._decide(me, txn, decision)
+        for p in pending:
+            self.send(me, p, txn, "decision", decision)
+        out.done_at_ms = sim.now
+        self._record(out)
+        return out
+
+    def _participant(self, spec: TxnSpec, me: str):
+        cfg, sim = self.cfg, self.sim
+        txn = spec.txn_id
+        if me == spec.coordinator:
+            return
+        out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
+
+        if spec.all_read_only and spec.read_only_known_upfront:
+            self._decide(me, txn, Decision.COMMIT)
+            out.decision = Decision.COMMIT
+            self._record(out)
+            return out
+
+        tag, msg = yield self.wait(me, txn, "vote-req", cfg.votereq_timeout_ms)
+        if tag == "timeout" or not self.alive(me):
+            self._decide(me, txn, Decision.ABORT)
+            out.decision = Decision.ABORT
+            self._record(out)
+            return out
+        st = self._local(me, txn)
+        # CL: reply the vote immediately — NO local logging. The vote reply
+        # carries this participant's redo records (bigger ack message, §5.6).
+        vote = "VOTE-YES" if spec.vote_of(me) else "ABORT"
+        st["status"] = "voted"
+        self.send(me, spec.coordinator, txn, f"vote:{me}", vote)
+        tag, decision = yield self.wait(me, txn, "decision",
+                                        cfg.decision_timeout_ms)
+        if tag == "msg":
+            self._decide(me, txn, decision)
+            out.decision = decision
+        out.done_at_ms = sim.now
+        self._record(out)
+        return out
+
+
+def rtt_table() -> Dict[str, Dict]:
+    """Table 3: RTTs on the critical path when storage is Paxos-replicated.
+
+    Counted from coordinator starting the protocol until the decision can be
+    returned to the caller, as `prepare + commit = total` RTTs.
+    """
+    rows = {
+        "2pc": dict(prepare=3.0, commit=2.0,
+                    requires=[]),
+        "cornus": dict(prepare=3.0, commit=0.0,
+                       requires=["storage supports conditional write"]),
+        "cornus-opt1": dict(prepare=2.5, commit=0.0,
+                            requires=["paxos leader forwards to coordinator"]),
+        "2pc-coloc": dict(prepare=2.0, commit=1.0,
+                          requires=["participant coordinates replication"]),
+        "cornus-coloc": dict(prepare=2.0, commit=0.0,
+                             requires=["participant coordinates replication"]),
+        "paxos-commit": dict(prepare=1.5, commit=0.0,
+                             requires=["participant coordinates replication",
+                                       "acceptors forward to coordinator"]),
+    }
+    for r in rows.values():
+        r["total"] = r["prepare"] + r["commit"]
+    return rows
+
+
+def predicted_caller_latency_ms(protocol: str, paxos_rtt_ms: float) -> float:
+    """Caller latency predicted by Table 3 given one inter-replica RTT."""
+    return rtt_table()[protocol]["total"] * paxos_rtt_ms

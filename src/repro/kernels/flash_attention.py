@@ -1,0 +1,132 @@
+"""Flash attention for TPU (Pallas): blocked online-softmax, MXU-aligned.
+
+TPU-native formulation (not a CUDA port):
+  * grid = (batch, q_heads, q_blocks, kv_blocks); the kv dim is the
+    innermost sequential dim, with fp32 running (m, l, acc) carried in VMEM
+    scratch across kv iterations — the canonical TPU flash pattern.
+  * BlockSpecs tile q/k/v into (block_q × head_dim) / (block_kv × head_dim)
+    VMEM tiles; block sizes default to 128 (MXU lane width).
+  * GQA handled by the k/v index_map (q head h reads kv head h // group).
+  * Supports causal masking, sliding windows (local attention), gemma-style
+    logit soft-capping, and decode-time kv_len masking — the same contract
+    as ``repro.models.layers.attention``.
+
+Validated in interpret mode on CPU against ``ref.attention_ref`` over a
+shape/dtype sweep (tests/test_kernels.py); compiled path requires a real
+TPU backend.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, kv_len, block_q, block_kv,
+            n_kv_blocks, q_offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0) + q_offset
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    keep = jnp.ones((block_q, block_kv), jnp.bool_)
+    if causal:
+        keep &= k_pos <= q_pos
+        if window > 0:
+            keep &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        keep &= k_pos < kv_len
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0, kv_len=None,
+                    block_q=DEFAULT_BLOCK_Q, block_kv=DEFAULT_BLOCK_KV,
+                    interpret=False):
+    """q: (B,Hq,Sq,hd)  k,v: (B,Hkv,Skv,hd) -> (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    n_q = -(-Sq // block_q)
+    n_kv = -(-Skv // block_kv)
+    pad_q, pad_kv = n_q * block_q - Sq, n_kv * block_kv - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        # Padded kv columns must be masked out.
+        kv_len = Skv if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(hd), causal=causal, window=window,
+        softcap=softcap, kv_len=kv_len, block_q=block_q, block_kv=block_kv,
+        n_kv_blocks=n_kv, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, h, qi, ki, g=g: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, h, qi, ki, g=g: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, n_q * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,99 @@
+"""Chunked selective-scan (Mamba) for TPU (Pallas).
+
+The XLA path materializes per-chunk state tensors in HBM ((chunk,B,di,N)
+fp32 — the §Roofline memory-bound term for jamba).  This kernel keeps the
+running SSM state (di_block × N) resident in VMEM scratch across the whole
+sequence: grid = (batch, di_blocks, chunks) with chunks innermost-
+sequential; each step loads one (chunk × di_block) tile of u/dt and one
+(chunk × N) tile of b/c, runs the recurrence, writes y, and carries h in
+VMEM — HBM traffic is exactly one read of the inputs + one write of y.
+
+The in-chunk loop is a fori over time steps on (di_block, N) tiles — on TPU
+these are VPU element-wise ops; hardware-efficient variants reformulate to
+MXU matmuls, which does not change the HBM traffic this kernel eliminates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+DEFAULT_DI_BLOCK = 256
+
+
+def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+            h_scr, *, chunk, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)        # (bd, N)
+
+    a = a_ref[...].astype(jnp.float32)                    # (bd, N)
+
+    def step(t, h):
+        u_t = u_ref[0, t].astype(jnp.float32)             # (bd,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)           # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)             # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)             # (N,)
+        abar = jnp.exp(dt_t[:, None] * a)                 # (bd, N)
+        h = abar * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = (h @ c_t).astype(y_ref.dtype)       # (bd,)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_scr[...]
+
+
+def mamba_scan(u, dt, a, b, c, h0, *, chunk=DEFAULT_CHUNK,
+               di_block=DEFAULT_DI_BLOCK, interpret=False):
+    """u,dt: (B,S,di)  a: (di,N)  b,c: (B,S,N)  h0: (B,di,N) fp32.
+
+    Returns (y (B,S,di), h_last (B,di,N) fp32).
+    """
+    B, S, di = u.shape
+    N = a.shape[-1]
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    di_block = min(di_block, di)
+    n_di = -(-di // di_block)
+    assert di % di_block == 0, (di, di_block)
+    pad = n_chunks * chunk - S
+    if pad:
+        # dt=0 padding is the identity update (abar=1, bbar=0).
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, n_di, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda bi, d, ci: (bi, ci, d)),
+            pl.BlockSpec((1, chunk, di_block), lambda bi, d, ci: (bi, ci, d)),
+            pl.BlockSpec((di_block, N), lambda bi, d, ci: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, d, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, d, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, di_block, N), lambda bi, d, ci: (bi, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda bi, d, ci: (bi, ci, d)),
+            pl.BlockSpec((1, di_block, N), lambda bi, d, ci: (bi, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_chunks * chunk, di), u.dtype),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di_block, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, a, b, c, h0)
+    return y[:, :S], h_last

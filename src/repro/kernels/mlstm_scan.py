@@ -1,0 +1,125 @@
+"""Chunkwise-parallel mLSTM for TPU (Pallas).
+
+xLSTM's matrix-memory cell is a gated linear attention:
+    C_t = f_t C_{t-1} + i_t k_t v_tᵀ ,   y_t = (q_t/√d) · C_t
+
+Chunkwise form (the MXU-friendly one): per chunk of length c,
+    intra:  y += ((q Kᵀ) ⊙ D) V      D_ts = exp(F_t - F_s)·i_s  (t ≥ s)
+    inter:  y += exp(F_t) · q C_prev
+    state:  C ← exp(F_c) C_prev + (K ⊙ r)ᵀ V,  r_s = exp(F_c - F_s)·i_s
+with F the in-chunk cumulative log-forget.  All three terms are (c×d)·(d×d)
+matmuls — MXU work — while the (d×d) state C stays resident in VMEM scratch
+across chunks.  grid = (B·H, chunks), chunks innermost-sequential.
+
+Gates arrive as raw (0,1) i/f values; log/exp stabilization happens in fp32
+inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, y_ref, cout_ref,
+            c_scr, *, chunk, n_chunks, scale):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = c0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale             # (c, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    ig = i_ref[0].astype(jnp.float32)                    # (c,)
+    fg = f_ref[0].astype(jnp.float32)
+
+    logf = jnp.log(fg + 1e-8)
+    cum = jnp.cumsum(logf)                               # (c,) ≤ 0
+    # intra-chunk decay matrix D_ts = exp(cum_t - cum_s) · i_s for t >= s
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ratio = cum[:, None] - cum[None, :]
+    d_mat = jnp.where(t_idx >= s_idx, jnp.exp(ratio) * ig[None, :], 0.0)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * d_mat, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: decay_t · q_t C_prev
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        q, c_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: C = exp(cum_c) C + Σ_s exp(cum_c - cum_s) i_s k_s v_sᵀ
+    rem = jnp.exp(cum[-1] - cum) * ig                    # (c,)
+    c_scr[...] = c_scr[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        k * rem[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        cout_ref[0] = c_scr[...]
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, c0, *, chunk=DEFAULT_CHUNK,
+               interpret=False):
+    """q,k,v: (B,S,H,hd)  i,f: (B,S,H) in (0,1)  c0: (B,H,hd,hd) fp32.
+
+    Returns (y (B,S,H,hd), c_last (B,H,hd,hd) fp32).  Matches
+    ``ref.mlstm_ref`` (which runs the recurrence sequentially).
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        # f=1 (log 0), i=0 padding is the identity update.
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)))
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=1.0)
+    Sp = n_chunks * chunk
+    # (B,S,H,…) -> (B*H, chunks… ) layout
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    ib = i_gate.transpose(0, 2, 1).reshape(B * H, Sp)
+    fb = f_gate.transpose(0, 2, 1).reshape(B * H, Sp)
+    c0b = c0.reshape(B * H, hd, hd)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks,
+                               scale=1.0 / math.sqrt(hd))
+    y, c_last = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, hd, hd), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(qb, kb, vb, ib, fb, c0b)
+    y = y[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, c_last.reshape(B, H, hd, hd)

@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs in Python per grid step, bit-faithful to the TPU dataflow.
+On a TPU backend the same calls compile through Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .decode_attention import flash_decode
+from .flash_attention import flash_attention
+from .mamba_scan import mamba_scan
+from .mlstm_scan import mlstm_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return flash_attention(q, k, v, **kw)
+
+
+def decode_attention(q, k, v, kv_len, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return flash_decode(q, k, v, kv_len, **kw)
+
+
+def selective_scan(u, dt, a, b, c, h0, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return mamba_scan(u, dt, a, b, c, h0, **kw)
+
+
+def mlstm(q, k, v, i_gate, f_gate, c0, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return mlstm_scan(q, k, v, i_gate, f_gate, c0, **kw)

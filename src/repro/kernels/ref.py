@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (independent, naive math).
+
+These are deliberately the SIMPLEST correct implementations — materialized
+masks, sequential scans — so kernel tests compare against unambiguous
+ground truth rather than against another optimized path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                  q_offset=0, kv_len=None):
+    """q: (B,Hq,Sq,hd)  k,v: (B,Hkv,Skv,hd)  ->  (B,Hq,Sq,hd). fp32 math."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    keep = jnp.ones((Sq, Skv), bool)
+    if causal:
+        keep &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            keep &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_len is not None:
+        keep &= (k_pos < kv_len)[None, :]
+    s = jnp.where(keep[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def mamba_scan_ref(u, dt, a, b, c, h0):
+    """Sequential selective scan.  u,dt: (B,S,di)  a: (di,N)
+    b,c: (B,S,N)  h0: (B,di,N)  ->  y (B,S,di), h_last."""
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        abar = jnp.exp(dt_t[..., None] * a)                 # (B,di,N)
+        h = abar * h + dt_t[..., None] * b_t[:, None, :] * u_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (u.swapaxes(0, 1), dt.swapaxes(0, 1), b.swapaxes(0, 1),
+          c.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                              tuple(x.astype(jnp.float32) for x in xs))
+    return ys.swapaxes(0, 1), h_last
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate, c0, n0):
+    """Sequential mLSTM (gated linear attention form used by the model).
+
+    q,k,v: (B,S,H,hd)  i,f: (B,S,H) in (0,1)  c0: (B,H,hd,hd)  n0: (B,H,hd)
+    y_t = q_t · C_t  with  C_t = f_t C_{t-1} + i_t k_t v_tᵀ  (all fp32).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, inp):
+        C, n = carry
+        q_t, k_t, v_t, i_t, f_t = inp                      # (B,H,hd)…
+        C = f_t[..., None, None] * C + \
+            i_t[..., None, None] * jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        n = f_t[..., None] * n + i_t[..., None] * k_t
+        y = jnp.einsum("bhd,bhde->bhe", q_t * scale, C)
+        return (C, n), y
+
+    # reorder (B,S,H,…) -> (S,B,H,…)
+    qs, ks, vs = (t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                  for t in (q, k, v))
+    is_, fs = (t.transpose(1, 0, 2).astype(jnp.float32)
+               for t in (i_gate, f_gate))
+    (c_last, n_last), ys = jax.lax.scan(
+        step, (c0.astype(jnp.float32), n0.astype(jnp.float32)),
+        (qs, ks, vs, is_, fs))
+    return ys.transpose(1, 0, 2, 3), c_last, n_last

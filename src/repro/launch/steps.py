@@ -1,0 +1,261 @@
+"""Step functions lowered by the dry-run and run by the drivers.
+
+  train_step   — loss + grad + AdamW update (the train_4k cells)
+  prefill_step — prompt forward, returns last-position logits + KV cache
+  decode_step  — one token against a max_len cache (decode_32k / long_500k)
+
+Plus per-shape ``input_specs`` (ShapeDtypeStructs with NamedShardings — no
+allocation) and ``period_body_fn`` used by the dry-run to cost one scan
+period (XLA's cost model counts while-loop bodies once; the dry-run scales
+the body cost by the trip count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import config as mc
+from ..models import lm
+from ..models.layers import PSpec, param_structs
+from ..optim import (AdamWConfig, adamw_init, adamw_update, CompressionConfig,
+                     compress_gradients, decompress_gradients,
+                     error_feedback_update, wsd_schedule)
+from .sharding import Rules, constrain, use_rules
+
+
+@dataclass(frozen=True)
+class TrainSettings:
+    remat: str = "dots"
+    opt: AdamWConfig = AdamWConfig()
+    # int8 gradient compression around the DP all-reduce (beyond-paper).
+    compress: Optional[CompressionConfig] = None
+    schedule: str = "wsd"
+    warmup: int = 100
+    stable: int = 10_000
+    decay: int = 1_000
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: mc.ModelConfig, settings: TrainSettings,
+                    rules: Optional[Rules] = None):
+    def lr_scale(step):
+        return wsd_schedule(step, warmup=settings.warmup,
+                            stable=settings.stable, decay=settings.decay)
+
+    def train_step(params, opt_state, batch, step):
+        with use_rules(rules):
+            def loss_fn(p):
+                loss, _ = lm.forward(cfg, p, batch, remat=settings.remat)
+                return loss
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            if settings.compress is not None:
+                grads = _compressed_allreduce(grads, settings.compress, rules)
+            new_params, new_opt = adamw_update(
+                grads, opt_state, params, settings.opt, lr_scale(step))
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def _compressed_allreduce(grads, ccfg: CompressionConfig, rules):
+    """Quantize → (implicit DP psum) → dequantize.
+
+    Under pure pjit the DP reduction is fused into the backward pass by
+    SPMD, so there is no separate all-reduce to intercept; we re-shard the
+    gradient leaves through an int8 bottleneck with a sharding constraint,
+    which materializes the int8 collective in HLO.  Error feedback is
+    carried in the optimizer state by the full driver (repro.launch.train);
+    here the stateless form is used for lowering.
+    """
+    q, s, pre = compress_gradients(grads, ccfg)
+    q = jax.tree_util.tree_map(
+        lambda t: constrain(t, ("fsdp",) + (None,) * (t.ndim - 1)), q)
+    return decompress_gradients(q, s)
+
+
+def make_prefill_step(cfg: mc.ModelConfig, max_len: int,
+                      rules: Optional[Rules] = None):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            logits, cache, pos = lm.prefill(cfg, params, batch, max_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: mc.ModelConfig, rules: Optional[Rules] = None):
+    def decode_step(params, batch, cache, pos):
+        with use_rules(rules):
+            logits, new_cache = lm.decode_step(cfg, params, batch, cache, pos)
+        return logits, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; zero allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype, rules: Optional[Rules], axes):
+    sh = rules.sharding(axes, shape) if rules else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: mc.ModelConfig, B: int, S: int, rules, *,
+                with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = _sds((B, S), jnp.int32, rules, ("batch", None))
+    elif cfg.input_mode == "embeds":
+        out["frame_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, rules,
+                                   ("batch", None, None))
+    else:  # mixed VLM
+        n_patch = max(1, int(S * cfg.patch_frac)) if S > 1 else 0
+        n_text = S - n_patch
+        out["patch_embeds"] = _sds((B, n_patch, cfg.d_model), jnp.bfloat16,
+                                   rules, ("batch", None, None))
+        out["tokens"] = _sds((B, n_text), jnp.int32, rules, ("batch", None))
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32, rules, ("batch", None))
+    return out
+
+
+def model_structs(cfg: mc.ModelConfig, rules, dtype=jnp.bfloat16):
+    return param_structs(lm.model_specs(cfg), rules, dtype)
+
+
+def opt_structs(cfg: mc.ModelConfig, rules, opt_cfg: AdamWConfig):
+    specs = lm.model_specs(cfg)
+
+    def mk(s: PSpec):
+        sh = rules.sharding(s.axes, s.shape) if rules else None
+        return jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype, sharding=sh)
+
+    moments = jax.tree_util.tree_map(mk, specs,
+                                     is_leaf=lambda x: isinstance(x, PSpec))
+    return {"m": moments, "v": jax.tree_util.tree_map(lambda x: x, moments),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_structs(cfg: mc.ModelConfig, B: int, max_len: int, rules,
+                  dtype=jnp.bfloat16):
+    specs = lm.cache_specs(cfg, B, max_len)
+
+    def mk(s: PSpec):
+        sh = rules.sharding(s.axes, s.shape) if rules else None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or dtype, sharding=sh)
+
+    return jax.tree_util.tree_map(mk, specs,
+                                  is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def input_specs(cfg: mc.ModelConfig, shape: mc.ShapeConfig,
+                rules: Optional[Rules], settings: TrainSettings):
+    """Everything the step for this shape-kind takes, as structs."""
+    B, S = shape.global_batch, shape.seq_len
+    params = model_structs(cfg, rules)
+    if shape.kind == "train":
+        return dict(
+            params=params,
+            opt_state=opt_structs(cfg, rules, settings.opt),
+            batch=batch_specs(cfg, B, S, rules, with_labels=True),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+    if shape.kind == "prefill":
+        return dict(params=params,
+                    batch=batch_specs(cfg, B, S, rules, with_labels=False))
+    # decode: one new token against a seq_len cache
+    one = batch_specs(cfg, B, 1, rules, with_labels=False)
+    return dict(params=params, batch=one,
+                cache=cache_structs(cfg, B, S, rules),
+                pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Period body (dry-run cost scaling)
+# ---------------------------------------------------------------------------
+def make_period_body(cfg: mc.ModelConfig, shape: mc.ShapeConfig,
+                     rules: Optional[Rules], settings: TrainSettings):
+    """One scan-period of the layer stack, as its own jit-able function.
+
+    Used by the dry-run: XLA cost analysis counts a while-loop body once, so
+    the full-module cost is corrected by (n_periods - 1) × body cost.
+    Returns (fn, example_args) or None when there is no scanned stack.
+    """
+    if cfg.n_periods <= 1:
+        return None
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    layer_tree = {f"p{p}": lm.layer_specs(cfg, p)
+                  for p in range(len(cfg.pattern))}
+    lp = param_structs(layer_tree, rules, jnp.bfloat16)
+    x = _sds((B, S, cfg.d_model), jnp.bfloat16, rules, ("batch", None, None))
+    if cfg.mrope:
+        pos = _sds((3, B, S), jnp.int32, rules, (None, "batch", None))
+    else:
+        pos = _sds((B, S), jnp.int32, rules, ("batch", None))
+
+    cache = None
+    if shape.kind == "decode":
+        cache_tree = {
+            f"p{p}": lm.MIXERS[cfg.pattern[p]][2](cfg, B, shape.seq_len)
+            for p in range(len(cfg.pattern))}
+        cache = cache_structs_from(cache_tree, rules)
+
+    from ..models.blocks import Ctx, layer_apply
+
+    def body_train(layer_params, x, positions):
+        with use_rules(rules):
+            def fwd(lp_, x_):
+                h = x_
+                aux = 0.0
+                for p, kind in enumerate(cfg.pattern):
+                    ctx = lm._layer_ctx(cfg, kind, "train", positions, None,
+                                        0, 0)
+                    h, _, a = layer_apply(cfg, kind, cfg.is_moe_layer(p),
+                                          lp_[f"p{p}"], h, ctx)
+                    aux = aux + a
+                return jnp.sum(h.astype(jnp.float32)) + aux
+
+            fn = fwd
+            if settings.remat != "none":
+                fn = lm._remat_wrap(fwd, settings.remat)
+            val, grads = jax.value_and_grad(fn, argnums=(0, 1))(
+                layer_params, x)
+        return val, grads
+
+    def body_infer(layer_params, x, positions, cache_in, pos_scalar):
+        with use_rules(rules):
+            h = x
+            caches = {}
+            for p, kind in enumerate(cfg.pattern):
+                mode = "decode" if shape.kind == "decode" else "prefill"
+                c_in = cache_in[f"p{p}"] if cache_in is not None else None
+                ctx = lm._layer_ctx(cfg, kind, mode, positions, c_in,
+                                    pos_scalar, shape.seq_len)
+                h, c_out, _ = layer_apply(cfg, kind, cfg.is_moe_layer(p),
+                                          layer_params[f"p{p}"], h, ctx)
+                if c_out is not None:
+                    caches[f"p{p}"] = c_out
+        return h, caches
+
+    if shape.kind == "train":
+        return body_train, (lp, x, pos)
+    return (lambda lp_, x_, pos_, c_: body_infer(
+        lp_, x_, pos_, c_, jnp.int32(0))), (lp, x, pos, cache)
+
+
+def cache_structs_from(spec_tree, rules, dtype=jnp.bfloat16):
+    def mk(s: PSpec):
+        sh = rules.sharding(s.axes, s.shape) if rules else None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or dtype, sharding=sh)
+    return jax.tree_util.tree_map(mk, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, PSpec))

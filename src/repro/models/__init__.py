@@ -1,0 +1,10 @@
+"""Model zoo: 10 assigned architectures over shared decoder substrate."""
+from .config import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, ModelConfig, ShapeConfig, smoke)
+from .lm import (cache_specs, decode_step, forward, init_cache, init_model,
+                 model_specs, prefill)
+
+__all__ = ["ModelConfig", "ShapeConfig", "smoke", "ALL_SHAPES", "TRAIN_4K",
+           "PREFILL_32K", "DECODE_32K", "LONG_500K", "forward", "prefill",
+           "decode_step", "model_specs", "cache_specs", "init_model",
+           "init_cache"]

@@ -1,0 +1,486 @@
+"""Decoder block kinds: attn / attn_local / mamba / mlstm / slstm (+ FFN/MoE).
+
+Every kind implements:
+  specs(cfg)                      -> PSpec tree for one layer
+  apply(cfg, params, x, ctx)     -> (x_out, cache_out, aux)
+with ``ctx`` carrying mode ("train" | "prefill" | "decode"), positions,
+rope theta, window, and the layer's incoming cache.  Caches are pytrees so
+the LM can stack them across scan periods.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import constrain
+from .config import ModelConfig
+from .layers import (DOWN_W, UP_W, PSpec, apply_mrope, apply_rope,
+                     attention, dense, rms_norm, swiglu)
+from .moe import moe_apply, moe_specs
+
+SSM_CHUNK = 64      # mamba: tokens per associative-scan chunk
+MLSTM_CHUNK = 256   # mLSTM: chunkwise-parallel block size
+
+
+@dataclass
+class Ctx:
+    mode: str                       # train | prefill | decode
+    positions: jax.Array            # (B,S) int32 or (3,B,S) for mrope
+    theta: float
+    window: int = 0                 # 0 = global attention
+    cache: Any = None               # layer cache (decode/prefill)
+    pos_offset: Any = 0             # scalar or array: absolute pos of x[0]
+    max_len: int = 0                # cache capacity
+
+
+def _head_axes(n: int, hd: int, model_min: int = 16):
+    """Q / attention-output sharding: heads on the TP axis.
+
+    GSPMD pads head counts that don't divide the axis (36 heads -> 48 lanes,
+    8 heads -> 16 half-empty lanes); the padding waste only touches the
+    attention einsums, never the big MLP matmuls.  KV activations are kept
+    REPLICATED (they are G× smaller than Q under GQA) — sharding them on a
+    different dim than Q provokes involuntary full rematerialization in the
+    SPMD partitioner (observed: +60 GB/device of all-reduce on llama3.2).
+    """
+    return ("batch", None, "model", None)
+
+
+KV_REPLICATED = ("batch", None, None, None)
+
+
+# ===========================================================================
+# Attention (+ local window variant)
+# ===========================================================================
+def attn_specs(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "ln": PSpec((d,), (None,), init="zeros"),
+        "wq": PSpec((d, nq * hd), ("fsdp", "model")),
+        "wk": PSpec((d, nkv * hd), ("fsdp", "model")),
+        "wv": PSpec((d, nkv * hd), ("fsdp", "model")),
+        "wo": PSpec((nq * hd, d), ("model", "fsdp")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = PSpec((hd,), (None,), init="zeros")
+        s["k_norm"] = PSpec((hd,), (None,), init="zeros")
+    if cfg.post_norm:
+        s["post_ln"] = PSpec((d,), (None,), init="zeros")
+    return s
+
+
+def attn_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    # Sequence-sharded KV cache (flash-decode): batch holds "data", so the
+    # cache seq dim takes "model"; at batch=1 it takes both axes.
+    kv_axes = ("batch", "cache_seq_full" if batch == 1 else "cache_seq",
+               None, None)
+    return {
+        "k": PSpec((batch, max_len, nkv, hd), kv_axes, init="zeros"),
+        "v": PSpec((batch, max_len, nkv, hd), kv_axes, init="zeros"),
+    }
+
+
+def attn_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    B, S, D = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = dense(h, p["wq"], UP_W).reshape(B, S, nq, hd)
+    k = dense(h, p["wk"], UP_W).reshape(B, S, nkv, hd)
+    v = dense(h, p["wv"], UP_W).reshape(B, S, nkv, hd)
+    if ctx.mode == "decode":
+        # Flash-decode sharding: the 1-token q is tiny — REPLICATE it and
+        # keep the cache sequence-sharded; sharding q on heads while the
+        # cache shards on seq made XLA all-gather the whole cache
+        # (observed: 53 GB/device/step on gemma2 decode_32k).
+        q = constrain(q, ("batch", None, None, None))
+    else:
+        q = constrain(q, _head_axes(nq, hd))
+    k = constrain(k, KV_REPLICATED)
+    v = constrain(v, KV_REPLICATED)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, ctx.positions, ctx.theta, cfg.mrope_sections)
+        k = apply_mrope(k, ctx.positions, ctx.theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, ctx.positions, ctx.theta)
+        k = apply_rope(k, ctx.positions, ctx.theta)
+
+    new_cache = None
+    if ctx.mode == "decode":
+        cache = ctx.cache
+        pos = ctx.pos_offset
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        o = attention(q, ck, cv, causal=False, window=ctx.window,
+                      cap=cfg.attn_softcap, q_offset=pos, kv_len=pos + S)
+    else:
+        o = attention(q, k, v, causal=True, window=ctx.window,
+                      cap=cfg.attn_softcap)
+        if ctx.mode == "prefill":
+            pad = ctx.max_len - S
+            new_cache = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+    o = constrain(o, _head_axes(nq, hd))
+    out = dense(o.reshape(B, S, nq * hd), p["wo"], DOWN_W)
+    if cfg.post_norm:
+        out = rms_norm(out, p["post_ln"], cfg.norm_eps)
+    return out, new_cache
+
+
+# ===========================================================================
+# Mamba (selective SSM) — jamba's mixer
+# ===========================================================================
+def mamba_specs(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    return {
+        "ln": PSpec((d,), (None,), init="zeros"),
+        "w_in": PSpec((d, 2 * di), ("fsdp", "model")),
+        "conv": PSpec((cfg.ssm_conv, di), (None, "model"), scale=0.1),
+        "w_bcdt": PSpec((di, 2 * n + dt_rank), ("model", None)),
+        "w_dt": PSpec((dt_rank, di), (None, "model"), scale=0.5),
+        "dt_bias": PSpec((di,), ("model",), init="zeros"),
+        "a_log": PSpec((di, n), ("model", None), init="zeros"),
+        "d_skip": PSpec((di,), ("model",), init="ones"),
+        "w_out": PSpec((di, d), ("model", "fsdp")),
+    }
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int, _max_len: int):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": PSpec((batch, cfg.ssm_conv - 1, di), ("batch", None, "model"),
+                      init="zeros"),
+        "ssm": PSpec((batch, di, cfg.ssm_state), ("batch", "model", None),
+                     init="zeros", dtype="float32"),
+    }
+
+
+def _ssm_scan(u, dt, a, b, c, h0):
+    """Chunked selective scan.  u,dt:(B,S,di)  b,c:(B,S,N)  a:(di,N).
+
+    Outer lax.scan over chunks carries the (B,di,N) state; inside a chunk the
+    linear recurrence h_t = Ā_t h_{t-1} + B̄_t u_t runs as an associative
+    scan, so only (chunk,B,di,N) is ever materialized.
+    """
+    B, S, di = u.shape
+    n = a.shape[-1]
+    c_len = min(SSM_CHUNK, S)
+    n_chunks = -(-S // c_len)
+    pad = n_chunks * c_len - S
+    u_, dt_, b_, c_ = (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                       for t in (u, dt, b, c))
+
+    abar = jnp.exp(dt_[..., None] * a)                        # (B,S',di,N)
+    bbar = dt_[..., None] * b_[:, :, None, :] * u_[..., None]  # (B,S',di,N)
+    abar = abar.reshape(B, n_chunks, c_len, di, n).transpose(1, 0, 2, 3, 4)
+    bbar = bbar.reshape(B, n_chunks, c_len, di, n).transpose(1, 0, 2, 3, 4)
+    cc = c_.reshape(B, n_chunks, c_len, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        ab, bb, cb = inp                                       # (B,c,di,N)…
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_sc, b_sc = jax.lax.associative_scan(
+            combine, (ab, bb), axis=1)
+        hs = b_sc + a_sc * h[:, None]                          # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cb)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (abar, bbar, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * c_len, di)[:, :S]
+    return y, h_last
+
+
+def mamba_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    dt_rank = max(1, D // 16)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = dense(h, p["w_in"], UP_W)
+    xs, z = jnp.split(xz, 2, axis=-1)                          # (B,S,di)
+    xs = constrain(xs, ("batch", None, "model"))
+
+    # Causal conv1d over time (kernel ssm_conv).
+    if ctx.mode == "decode":
+        prev = ctx.cache["conv"]                               # (B,K-1,di)
+        xin = jnp.concatenate([prev, xs], axis=1)
+        new_conv = xin[:, -(cfg.ssm_conv - 1):]
+    else:
+        xin = jnp.pad(xs, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+        new_conv = xin[:, xin.shape[1] - (cfg.ssm_conv - 1):]
+    xc = sum(xin[:, i:i + (xs.shape[1])] * p["conv"][i]
+             for i in range(cfg.ssm_conv))
+    xc = jax.nn.silu(xc)
+
+    bcdt = dense(xc, p["w_bcdt"])
+    b_in, c_in, dt_in = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(dense(dt_in, p["w_dt"]) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    h0 = ctx.cache["ssm"].astype(jnp.float32) if ctx.mode == "decode" else \
+        jnp.zeros((B, di, n), jnp.float32)
+    y, h_last = _ssm_scan(xc.astype(jnp.float32), dt.astype(jnp.float32),
+                          a, b_in.astype(jnp.float32),
+                          c_in.astype(jnp.float32), h0)
+    y = (y.astype(x.dtype) + xc * p["d_skip"]) * jax.nn.silu(z)
+    out = dense(y, p["w_out"], DOWN_W)
+    new_cache = None
+    if ctx.mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv, "ssm": h_last.astype(jnp.float32)}
+    return out, new_cache
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (recurrent)
+# ===========================================================================
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    return {
+        "ln": PSpec((d,), (None,), init="zeros"),
+        "w_up": PSpec((d, 2 * di), ("fsdp", "model")),
+        "wq": PSpec((di, di), ("model", None)),
+        "wk": PSpec((di, di), ("model", None)),
+        "wv": PSpec((di, di), ("model", None)),
+        "w_if": PSpec((di, 2 * cfg.n_heads), ("model", None), scale=0.1),
+        "out_norm": PSpec((di,), ("model",), init="zeros"),
+        "w_down": PSpec((di, d), ("model", "fsdp")),
+    }
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int, _max_len: int):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    hd = di // cfg.n_heads
+    return {
+        "C": PSpec((batch, cfg.n_heads, hd, hd), ("batch", None, None, None),
+                   init="zeros", dtype="float32"),
+        "n": PSpec((batch, cfg.n_heads, hd), ("batch", None, None),
+                   init="zeros", dtype="float32"),
+    }
+
+
+def _mlstm_cell(q, k, v, i_gate, f_gate, c0, n0):
+    """Chunkwise-parallel gated linear attention.
+
+    q,k,v: (B,S,H,hd)   i,f: (B,S,H) in (0,1)   c0: (B,H,hd,hd)
+    Decays stay in log space so chunk ratios never overflow.
+    """
+    B, S, H, hd = q.shape
+    c_len = min(MLSTM_CHUNK, S)
+    n_chunks = -(-S // c_len)
+    pad = n_chunks * c_len - S
+    q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+               for t in (q, k, v))
+    i_gate, f_gate = (jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+                      for t in (i_gate, f_gate))
+
+    def resh(t):
+        s = t.shape
+        return t.reshape((B, n_chunks, c_len) + s[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, is_, fs = map(resh, (q, k, v, i_gate, f_gate))
+    scale = 1.0 / math.sqrt(hd)
+
+    def chunk(carry, inp):
+        c_state, n_state = carry                 # (B,H,hd,hd), (B,H,hd)
+        qb, kb, vb, ib, fb = inp
+        logf = jnp.log(fb + 1e-8)                # (B,c,H) ≤ 0
+        cum = jnp.cumsum(logf, axis=1)           # within-chunk decay
+        # inter-chunk: y_inter_t = decay_t · q_t C_prev
+        decay_t = jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bshd,bhde->bshe", qb * scale, c_state) * decay_t
+        # intra-chunk: masked scores with decay ratio exp(cum_t - cum_s)·i_s
+        ratio = cum[:, :, None, :] - cum[:, None, :, :]        # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((c_len, c_len), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(ratio), 0.0)
+        sc = jnp.einsum("bshd,bthd->bsth", qb * scale, kb)
+        p_ = sc * w * ib[:, None, :, :]
+        y_intra = jnp.einsum("bsth,bthd->bshd", p_, vb)
+        # state update: C = A·C + Σ_s exp(cum_c - cum_s)·i_s k_s v_sᵀ
+        rem = jnp.exp(cum[:, -1:, :] - cum) * ib               # (B,c,H)
+        c_new = c_state * jnp.exp(cum[:, -1])[..., None, None] + \
+            jnp.einsum("bshd,bshe,bsh->bhde", kb, vb, rem)
+        n_new = n_state * jnp.exp(cum[:, -1])[..., None] + \
+            jnp.einsum("bshd,bsh->bhd", kb, rem)
+        return (c_new, n_new), y_inter + y_intra
+
+    (c_last, n_last), ys = jax.lax.scan(
+        chunk, (c0, n0), (qs, ks, vs, is_, fs))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * c_len, H, hd)[:, :S]
+    return y, c_last, n_last
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = int(cfg.mlstm_proj_factor * D)
+    hd = di // H
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up, z = jnp.split(dense(h, p["w_up"], UP_W), 2, axis=-1)
+    q = dense(up, p["wq"]).reshape(B, S, H, hd)
+    k = dense(up, p["wk"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = dense(up, p["wv"]).reshape(B, S, H, hd)
+    gates = dense(up, p["w_if"]).reshape(B, S, H, 2)
+    i_gate = jax.nn.sigmoid(gates[..., 0])
+    f_gate = jax.nn.sigmoid(gates[..., 1] + 3.0)  # bias toward remembering
+    if ctx.mode == "decode":
+        c0 = ctx.cache["C"]
+        n0 = ctx.cache["n"]
+    else:
+        c0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    y, c_last, n_last = _mlstm_cell(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        i_gate.astype(jnp.float32), f_gate.astype(jnp.float32), c0, n0)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(y, p["w_down"], DOWN_W)
+    cache = {"C": c_last, "n": n_last} if ctx.mode in ("decode", "prefill") \
+        else None
+    return out, cache
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    fh = int(cfg.slstm_proj_factor * d)
+    hd = d // cfg.n_heads
+    return {
+        "ln": PSpec((d,), (None,), init="zeros"),
+        "w_gates": PSpec((d, 4 * d), ("fsdp", "model")),
+        "r_gates": PSpec((cfg.n_heads, hd, 4 * hd), (None, None, None),
+                         scale=0.3),
+        "ln_ff": PSpec((d,), (None,), init="zeros"),
+        "w_ff1": PSpec((d, fh), ("fsdp", "model")),
+        "w_ff2": PSpec((fh, d), ("model", "fsdp")),
+    }
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int, _max_len: int):
+    d = cfg.d_model
+    ax = ("batch", "model")
+    return {k: PSpec((batch, d), ax, init="zeros", dtype="float32")
+            for k in ("c", "n", "h", "m")}
+
+
+def slstm_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    gx = dense(xin, p["w_gates"], UP_W).astype(jnp.float32)          # (B,S,4D)
+
+    if ctx.mode == "decode" and ctx.cache is not None:
+        state0 = tuple(ctx.cache[k].astype(jnp.float32)
+                       for k in ("c", "n", "h", "m"))
+    else:
+        state0 = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(state, gx_t):
+        c, n, hprev, m = state
+        hh = hprev.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, 4 * D)
+        it, ft, zt, ot = jnp.split(gx_t + rec, 4, axis=-1)
+        m_new = jnp.maximum(ft + m, it)          # exp-gate stabilizer
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c_new = f_ * c + i_ * jnp.tanh(zt)
+        n_new = f_ * n + i_
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                      # (B,S,D)
+    out = x + y
+    # feed-forward sub-block
+    f = rms_norm(out, p["ln_ff"], cfg.norm_eps)
+    f = dense(jax.nn.gelu(dense(f, p["w_ff1"], UP_W)), p["w_ff2"], DOWN_W)
+    cache = None
+    if ctx.mode in ("decode", "prefill"):
+        cache = dict(zip(("c", "n", "h", "m"), state))
+    return out + f - x, cache  # block returns delta (residual added by LM)
+
+
+# ===========================================================================
+# FFN / MoE wrapper
+# ===========================================================================
+def ffn_specs(cfg: ModelConfig, is_moe: bool) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    s = {"ln": PSpec((d,), (None,), init="zeros")}
+    if is_moe:
+        s["moe"] = moe_specs(cfg)
+    else:
+        s.update({
+            "w_gate": PSpec((d, cfg.d_ff), ("fsdp", "model")),
+            "w_up": PSpec((d, cfg.d_ff), ("fsdp", "model")),
+            "w_down": PSpec((cfg.d_ff, d), ("model", "fsdp")),
+        })
+    if cfg.post_norm:
+        s["post_ln"] = PSpec((d,), (None,), init="zeros")
+    return s
+
+
+def ffn_apply(cfg: ModelConfig, p, x, is_moe: bool):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if is_moe:
+        out, aux = moe_apply(cfg, p["moe"], h)
+    else:
+        out, aux = swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), 0.0
+    if cfg.post_norm:
+        out = rms_norm(out, p["post_ln"], cfg.norm_eps)
+    return out, aux
+
+
+# ===========================================================================
+# Kind registry
+# ===========================================================================
+MIXERS = {
+    "attn": (attn_specs, attn_apply, attn_cache_shape),
+    "attn_local": (attn_specs, attn_apply, attn_cache_shape),
+    "mamba": (mamba_specs, mamba_apply, mamba_cache_shape),
+    "mlstm": (mlstm_specs, mlstm_apply, mlstm_cache_shape),
+    "slstm": (slstm_specs, slstm_apply, slstm_cache_shape),
+}
+
+
+def layer_specs(cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
+    kind = cfg.full_pattern[layer_idx]
+    specs = {"mixer": MIXERS[kind][0](cfg)}
+    if kind in ("attn", "attn_local", "mamba") and \
+            (cfg.d_ff > 0 or cfg.is_moe_layer(layer_idx)):
+        specs["ffn"] = ffn_specs(cfg, cfg.is_moe_layer(layer_idx))
+    return specs
+
+
+def layer_apply(cfg: ModelConfig, kind: str, is_moe: bool, params, x,
+                ctx: Ctx):
+    """One full layer: mixer + optional FFN, with residuals."""
+    mix_out, new_cache = MIXERS[kind][1](cfg, params["mixer"], x, ctx)
+    x = x + mix_out * cfg.residual_scale
+    aux = 0.0
+    if "ffn" in params:
+        ffn_out, aux = ffn_apply(cfg, params["ffn"], x, is_moe)
+        x = x + ffn_out * cfg.residual_scale
+    x = constrain(x, ("batch", "seq", None))  # "seq" maps to the TP axis
+    return x, new_cache, aux                   # only under the sp profile

@@ -1,0 +1,320 @@
+"""Shared layers for the model zoo.
+
+Conventions:
+  * Params are plain pytrees (nested dicts of jnp arrays).  Their structure
+    is declared once as a tree of ``PSpec`` (shape + logical sharding axes +
+    init), from which both real initialization (smoke tests / examples) and
+    ShapeDtypeStruct stand-ins with NamedShardings (dry-run) are derived.
+  * Activations are annotated with ``sharding.constrain`` using logical axes;
+    with no active rule set this is an identity, so the same code runs on one
+    CPU device and on the 512-chip mesh.
+  * Attention is exact but *chunked* (online-softmax flash formulation in
+    pure jnp) above ``CHUNK_THRESHOLD`` so 32k-sequence cells never
+    materialize O(S²) score tensors.  The Pallas kernel in
+    ``repro.kernels.flash_attention`` implements the same contract for TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.sharding import constrain
+from .config import ModelConfig
+
+CHUNK_THRESHOLD = 8_192   # switch to chunked attention above this seq len
+Q_CHUNK = 2_048
+KV_CHUNK = 2_048
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; None => 1/sqrt(fan_in = shape[-2])
+    dtype: Optional[Any] = None    # None => caller's default (recurrent
+                                   # states pin fp32 regardless of default)
+
+    def stddev(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        return 1.0 / math.sqrt(max(1, fan_in))
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(spec_tree, rng: jax.Array, dtype=jnp.float32):
+    """Materialize a PSpec tree into arrays (deterministic per-path keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_pspec)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = []
+    for k, spec in zip(keys, leaves):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            arrs.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            arrs.append(jnp.ones(spec.shape, dt))
+        else:
+            arrs.append(
+                (jax.random.normal(k, spec.shape) * spec.stddev()).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def param_structs(spec_tree, rules, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs with shardings, for .lower() without allocation."""
+    def mk(spec: PSpec):
+        sh = rules.sharding(spec.axes, spec.shape) if rules else None
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype or dtype,
+                                    sharding=sh)
+    return jax.tree_util.tree_map(mk, spec_tree, is_leaf=is_pspec)
+
+
+def param_shardings(spec_tree, rules):
+    return jax.tree_util.tree_map(
+        lambda s: rules.sharding(s.axes, s.shape), spec_tree, is_leaf=is_pspec)
+
+
+def stack_specs(spec_tree, n: int):
+    """Add a leading layer-stack dim (for scan-over-layers)."""
+    return jax.tree_util.tree_map(
+        lambda s: PSpec((n,) + s.shape, (None,) + s.axes, s.init, s.scale,
+                        s.dtype),
+        spec_tree, is_leaf=is_pspec)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # Variance in fp32 for stability, but the x path stays in its own dtype:
+    # wholesale fp32 upcasts here made every SPMD-inserted all-reduce of the
+    # residual-stream cotangent fp32 (2x wire bytes; see EXPERIMENTS §Perf).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + weight.astype(x.dtype))
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x / cap)) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard, dual-theta, M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, N, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) — temporal / height / width position streams.
+    ``sections`` partitions the hd/2 frequency dims; each section takes its
+    angle from the corresponding stream.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)  # (hd/2,)
+    # (3, B, S, hd/2) angles per stream, then select per-section stream.
+    ang_all = positions[..., None].astype(jnp.float32) * freqs
+    sel = np.repeat(np.arange(3), np.array(sections))              # (hd/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), jnp.asarray(sel)[None, None, :, None],
+        axis=-1)[..., 0]                                           # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    return jnp.arange(seq)[None, :] + offset + jnp.zeros((batch, 1), jnp.int32)
+
+
+def mrope_positions(batch: int, n_patches: int, n_text: int) -> jax.Array:
+    """Stub VLM layout: image patches on a √n grid, then text tokens."""
+    grid = max(1, int(math.ceil(math.sqrt(max(1, n_patches)))))
+    idx = np.arange(n_patches)
+    t = np.zeros(n_patches)
+    h, w = idx // grid, idx % grid
+    t_text = n_patches + np.arange(n_text)  # all three streams advance
+    pos = np.stack([np.concatenate([t, t_text]),
+                    np.concatenate([h, t_text]),
+                    np.concatenate([w, t_text])])               # (3, S)
+    return jnp.asarray(np.broadcast_to(pos[:, None, :],
+                                       (3, batch, n_patches + n_text)),
+                       dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (exact, chunked online-softmax)
+# ---------------------------------------------------------------------------
+def _gqa_scores(q, k):
+    """q: (B,S,Nkv,G,hd)  k: (B,T,Nkv,hd) -> (B,Nkv,G,S,T) fp32."""
+    return jnp.einsum("bsngh,btnh->bngst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _mask_bias(q_pos, k_pos, window: int) -> jax.Array:
+    """Additive causal (+ optional sliding-window) bias, fp32."""
+    keep = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        keep &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(keep, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, cap: float = 0.0,
+              q_offset: int = 0, kv_len: Optional[jax.Array] = None,
+              ) -> jax.Array:
+    """Exact attention. q:(B,S,Nq,hd) k,v:(B,T,Nkv,hd) -> (B,S,Nq,hd).
+
+    * GQA via head grouping.
+    * window>0: sliding-window (local) attention.
+    * cap>0: gemma-style logit soft-capping.
+    * q_offset: absolute position of q[0] (decode: q_offset=pos).
+    * kv_len: dynamic valid KV length (decode against preallocated cache).
+    Chooses the chunked online-softmax path for long sequences.
+    """
+    B, S, Nq, hd = q.shape
+    T, Nkv = k.shape[1], k.shape[2]
+    G = Nq // Nkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, S, Nkv, G, hd)
+
+    # Chunking is for LONG QUERY sequences (train/prefill): it bounds the
+    # live score tensor.  Decode (S==1/small) must NOT chunk — the chunked
+    # reshape of the model-sharded cache seq dim defeats SPMD and
+    # all-gathers the entire cache (observed: 53 GB/device/step on gemma2
+    # decode_32k); the direct path keeps scores sharded on T and reduces
+    # tiny (B,N,G,S) partials instead.
+    if S > CHUNK_THRESHOLD:
+        return _chunked_attention(qg, k, v, causal=causal, window=window,
+                                  cap=cap, q_offset=q_offset, kv_len=kv_len
+                                  ).reshape(B, S, Nq, hd)
+
+    s = _gqa_scores(qg, k)                                # (B,Nkv,G,S,T)
+    s = softcap(s, cap)
+    q_pos = jnp.arange(S) + q_offset
+    k_pos = jnp.arange(T)
+    if causal:
+        s = s + _mask_bias(q_pos, k_pos, window)
+    if kv_len is not None:
+        s = jnp.where((k_pos < kv_len)[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bngst,btnh->bsngh", p.astype(v.dtype), v)
+    return o.reshape(B, S, Nq, hd)
+
+
+def _chunked_attention(qg, k, v, *, causal, window, cap, q_offset, kv_len):
+    """Flash-style exact attention: scan q-chunks × kv-chunks, fp32 running
+    (max, sum, acc).  Never materializes more than (Bq_chunk × kv_chunk)."""
+    B, S, Nkv, G, hd = qg.shape
+    T = k.shape[1]
+    qc = min(Q_CHUNK, S)
+    kc = min(KV_CHUNK, T)
+    n_q, n_k = -(-S // qc), -(-T // kc)
+    pad_q, pad_k = n_q * qc - S, n_k * kc - T
+
+    qg = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qs = qg.reshape(B, n_q, qc, Nkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = kp.reshape(B, n_k, kc, Nkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, n_k, kc, Nkv, hd).transpose(1, 0, 2, 3, 4)
+    valid_t = T if kv_len is None else kv_len
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        q_pos = qi * qc + jnp.arange(qc) + q_offset
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bsngh,btnh->bngst", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, cap)
+            keep = k_pos[None, :] < valid_t
+            if causal:
+                keep &= k_pos[None, :] <= q_pos[:, None]
+                if window > 0:
+                    keep &= (q_pos[:, None] - k_pos[None, :]) < window
+            else:
+                keep = jnp.broadcast_to(keep, (qc, kc))
+            s = jnp.where(keep[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bngst,btnh->bngsh", p.astype(vblk.dtype), vblk)
+            acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Nkv, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Nkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Nkv, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(n_k), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)        # (B,qc,Nkv,G,hd)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(n_q), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_q * qc, Nkv, G, hd)
+    return out[:, :S].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+def dense(x: jax.Array, w: jax.Array,
+          use_axes: Optional[Tuple] = None) -> jax.Array:
+    """x: (..., d_in) @ w: (d_in, d_out).
+
+    ``use_axes`` is the weight's sharding AT USE TIME.  ZeRO-3/FSDP weights
+    are stored with their contraction dim sharded over "data"; consuming
+    them directly makes GSPMD resolve the data-axis conflict with the
+    batch-sharded activations by REPLICATING THE ACTIVATION and partial-
+    summing over d (observed: 2 × 30 GB/device full-batch all-reduces per
+    layer on kimi-k2).  Constraining the weight to (None, "model") at use
+    forces the cheap resolution: all-gather the weight (ZeRO-3 semantics),
+    keep activations batch-sharded.
+    """
+    if use_axes is not None:
+        w = constrain(w, use_axes)
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+UP_W = (None, "model")     # use-time spec for (d_model, wide) weights
+DOWN_W = ("model", None)   # use-time spec for (wide, d_model) weights
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(dense(x, w_gate, UP_W)) * dense(x, w_up, UP_W)
+    h = constrain(h, ("batch", None, "model"))
+    return dense(h, w_down, DOWN_W)

@@ -1,0 +1,66 @@
+"""Int8 gradient compression with error feedback.
+
+Beyond-paper distributed-optimization lever: quantize gradients to int8
+(per-tensor scale) before the data-parallel all-reduce, carry the
+quantization residual in an error-feedback buffer so the bias vanishes over
+steps.  Cuts the DP collective term ~4× for fp32 / ~2× for bf16 grads.
+
+Used through ``train.make_train_step(..., compress=CompressionConfig())``;
+the quantize→psum→dequantize happens inside a shard_map over the batch axes
+so the HLO all-reduce really moves int8 bytes (visible in the dry-run's
+collective-bytes parse).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    stochastic: bool = False  # deterministic rounding keeps tests exact
+
+
+def _qmax(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def compress_gradients(grads, cfg: CompressionConfig, error_buf=None):
+    """Quantize a grad pytree to int8 + per-tensor fp32 scales.
+
+    Returns (q_tree, scales_tree, new_error_buf_residuals_source) — the
+    residual is computed AFTER dequantization by ``error_feedback_update``.
+    """
+    if error_buf is not None:
+        grads = jax.tree_util.tree_map(
+            lambda g, e: g.astype(jnp.float32) + e.astype(jnp.float32),
+            grads, error_buf)
+    qmax = _qmax(cfg.bits)
+
+    def q(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / qmax
+        qv = jnp.clip(jnp.round(g32 / scale), -qmax, qmax).astype(jnp.int8)
+        return qv, scale
+
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    qs = [q(g) for g in flat]
+    q_tree = jax.tree_util.tree_unflatten(tdef, [a for a, _ in qs])
+    s_tree = jax.tree_util.tree_unflatten(tdef, [b for _, b in qs])
+    return q_tree, s_tree, grads
+
+
+def decompress_gradients(q_tree, s_tree, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, s_tree)
+
+
+def error_feedback_update(pre_quant_grads, dequantized):
+    """Residual = what the quantizer lost this step (feeds the next one)."""
+    return jax.tree_util.tree_map(
+        lambda g, d: (g.astype(jnp.float32) - d.astype(jnp.float32)),
+        pre_quant_grads, dequantized)

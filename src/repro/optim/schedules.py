@@ -1,0 +1,27 @@
+"""LR schedules: WSD (MiniCPM's Warmup-Stable-Decay) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    """MiniCPM WSD: linear warmup → constant → exponential-ish decay.
+
+    Returns a multiplier in [0, 1] applied to the peak LR.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    w, s, d = float(warmup), float(stable), float(decay)
+    warm = step / jnp.maximum(w, 1.0)
+    in_decay = jnp.clip((step - w - s) / jnp.maximum(d, 1.0), 0.0, 1.0)
+    decay_mult = final_frac ** in_decay          # exp decay to final_frac
+    return jnp.where(step < w, warm, decay_mult)
+
+
+def cosine_schedule(step, *, warmup: int, total: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(float(warmup), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(float(total - warmup), 1.0),
+                 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,12 @@
+"""Sundial-like distributed transaction substrate (paper §5.1).
+
+Partitioned store with per-partition NO-WAIT 2PL lock tables, a closed-loop
+transaction executor running on the discrete-event sim, and the paper's two
+workloads (YCSB with zipfian skew, TPC-C NewOrder/Payment).
+"""
+from .store import LockTable, LockMode
+from .workload import TPCCWorkload, YCSBWorkload, zipf_sampler
+from .executor import BenchConfig, BenchResult, run_bench
+
+__all__ = ["LockTable", "LockMode", "YCSBWorkload", "TPCCWorkload",
+           "zipf_sampler", "BenchConfig", "BenchResult", "run_bench"]

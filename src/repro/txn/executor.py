@@ -1,0 +1,189 @@
+"""Closed-loop distributed-transaction executor on the discrete-event sim.
+
+Reproduces the paper's measurement setup (§5.1): N compute nodes, each with
+`threads_per_node` closed-loop workers executing stored-procedure txns; data
+accesses go to the owning partition over 0.5 ms RTT RPCs; NO-WAIT 2PL aborts
+on conflict with exponential backoff + retry; commit runs Cornus / 2PC / CL
+against the simulated storage service.  Latencies are collected for
+*distributed* transactions only, like the paper.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..core.protocol import Cluster, ProtocolConfig
+from ..core.sim import Sim
+from ..core.state import Decision, TxnSpec, Vote
+from ..core.storage import COMPUTE_RTT_MS, LatencyModel, SimStorage
+from ..core.variants import CoordinatorLogCluster
+from .store import LockMode, LockTable
+from .workload import Txn
+
+
+@dataclass
+class BenchConfig:
+    protocol: str = "cornus"          # cornus | 2pc | cl
+    n_nodes: int = 4
+    threads_per_node: int = 8
+    horizon_ms: float = 2000.0        # issue window (sim time)
+    rtt_ms: float = COMPUTE_RTT_MS
+    access_cpu_ms: float = 0.02       # local processing per access
+    backoff_ms: float = 1.0
+    max_attempts: int = 25
+    elr: bool = False
+    seed: int = 0
+
+
+@dataclass
+class BenchResult:
+    protocol: str
+    n_nodes: int
+    commits: int = 0
+    aborts: int = 0                  # failed attempts (NO-WAIT conflicts)
+    gaveups: int = 0
+    latencies: List[float] = field(default_factory=list)
+    exec_ms: List[float] = field(default_factory=list)
+    abort_ms: List[float] = field(default_factory=list)
+    prepare_ms: List[float] = field(default_factory=list)
+    commit_ms: List[float] = field(default_factory=list)
+    horizon_ms: float = 0.0
+
+    @staticmethod
+    def _avg(xs: List[float]) -> float:
+        return sum(xs) / len(xs) if xs else 0.0
+
+    @property
+    def avg_latency_ms(self) -> float:
+        return self._avg(self.latencies)
+
+    @property
+    def p99_latency_ms(self) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.commits / (self.horizon_ms / 1000.0) if self.horizon_ms else 0.0
+
+    def breakdown(self) -> Dict[str, float]:
+        return {"execution": self._avg(self.exec_ms),
+                "abort": self._avg(self.abort_ms),
+                "prepare": self._avg(self.prepare_ms),
+                "commit": self._avg(self.commit_ms)}
+
+
+def run_bench(workload_factory, model: LatencyModel,
+              cfg: BenchConfig) -> BenchResult:
+    """Run one trial; `workload_factory(nodes, seed)` builds the generator."""
+    sim = Sim()
+    storage = SimStorage(sim, model, seed=cfg.seed)
+    nodes = [f"n{i}" for i in range(cfg.n_nodes)]
+    # Timeouts must sit above the storage service's tail latency, or healthy
+    # transactions get spuriously terminated (the paper's deployments tune
+    # timeouts per service; we scale with the model's write latency).
+    tmo = max(25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms)
+    pcfg = ProtocolConfig(protocol="2pc" if cfg.protocol == "cl" else cfg.protocol,
+                          rtt_ms=cfg.rtt_ms, elr=cfg.elr,
+                          vote_timeout_ms=tmo, decision_timeout_ms=tmo,
+                          votereq_timeout_ms=tmo, termination_retry_ms=tmo,
+                          coop_retry_ms=tmo)
+    cluster_cls = CoordinatorLogCluster if cfg.protocol == "cl" else Cluster
+    cluster = cluster_cls(sim, storage, nodes, pcfg)
+    locks = {n: LockTable(n) for n in nodes}
+
+    def release(node: str, txn: str, *_):
+        locks[node].release_all(txn)
+
+    cluster.on_finish = lambda node, txn, dec, t: release(node, txn)
+    cluster.on_precommit = release  # only fires when cfg.elr
+
+    workload = workload_factory(nodes, cfg.seed)
+    res = BenchResult(cfg.protocol, cfg.n_nodes, horizon_ms=cfg.horizon_ms)
+    rng = random.Random(cfg.seed ^ 0x5EED)
+
+    def client(node: str, cid: int):
+        while sim.now < cfg.horizon_ms:
+            txn = workload.next_txn(node)
+            t_arrive = sim.now
+            abort_time = 0.0
+            attempt = 0
+            committed = False
+            while attempt < cfg.max_attempts:
+                attempt += 1
+                t_attempt = sim.now
+                ok = True
+                touched: List[str] = []
+                for (pnode, key, is_write) in txn.accesses:
+                    mode = LockMode.EXCLUSIVE if is_write else LockMode.SHARED
+                    if pnode != node:
+                        yield sim.timeout(cfg.rtt_ms)       # RPC to owner
+                    yield sim.timeout(cfg.access_cpu_ms)
+                    if pnode not in touched:
+                        touched.append(pnode)
+                    if not locks[pnode].try_lock(txn.txn_id, key, mode):
+                        ok = False
+                        break
+                if not ok:
+                    res.aborts += 1
+                    for p in touched:
+                        locks[p].release_all(txn.txn_id)
+                    backoff = cfg.backoff_ms * attempt * (0.5 + rng.random())
+                    yield sim.timeout(backoff)
+                    abort_time += sim.now - t_attempt
+                    continue
+                # Execution done — run atomic commit.
+                exec_ms = sim.now - t_attempt
+                spec = TxnSpec(
+                    txn_id=txn.txn_id, coordinator=node,
+                    participants=txn.participants,
+                    read_only=txn.read_only_parts,
+                    read_only_known_upfront=True)
+                if not txn.is_distributed:
+                    # Single-partition fast path: one forced commit record.
+                    if node not in txn.read_only_parts:
+                        yield storage.log(node, txn.txn_id, Vote.COMMIT,
+                                          writer=node)
+                    release(node, txn.txn_id)
+                    committed = True
+                else:
+                    done = cluster.run_txn(spec)
+                    out = yield done
+                    committed = out is not None and out.decision == Decision.COMMIT
+                    if committed:
+                        res.prepare_ms.append(out.prepare_ms)
+                        res.commit_ms.append(out.commit_ms)
+                if committed:
+                    if txn.is_distributed:
+                        res.commits += 1
+                        res.latencies.append(sim.now - t_arrive)
+                        res.exec_ms.append(exec_ms)
+                        res.abort_ms.append(abort_time)
+                    break
+                else:
+                    for p in txn.participants:
+                        locks[p].release_all(txn.txn_id)
+                    yield sim.timeout(cfg.backoff_ms * attempt)
+                    abort_time += sim.now - t_attempt
+            if not committed:
+                res.gaveups += 1
+
+    for n in nodes:
+        for c in range(cfg.threads_per_node):
+            sim.process(client(n, c))
+    sim.run(until=cfg.horizon_ms + 500.0)
+    return res
+
+
+def median_of_trials(workload_factory, model: LatencyModel, cfg: BenchConfig,
+                     trials: int = 3) -> BenchResult:
+    """Paper §5.1.4: take the trial with median average latency."""
+    runs = []
+    for t in range(trials):
+        c = BenchConfig(**{**cfg.__dict__, "seed": cfg.seed + 1000 * t})
+        runs.append(run_bench(workload_factory, model, c))
+    runs.sort(key=lambda r: r.avg_latency_ms)
+    return runs[len(runs) // 2]

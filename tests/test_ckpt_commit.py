@@ -1,0 +1,185 @@
+"""Cornus checkpoint-commit integration tests (live protocol over threads +
+FileStore CAS).  These are the training-framework deployment of the paper's
+claims: atomicity of multi-host checkpoints, non-blocking resolution when
+hosts die mid-epoch, straggler force-abort, elastic restore.
+"""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CornusCheckpointer, latest_committed, pack_tree,
+                        partition_leaves, restore_params, unpack_tree)
+from repro.ckpt.commit import AsyncCheckpointer, _txn
+from repro.core.state import Decision, Vote
+from repro.core.storage import FileStore, MemoryStore
+
+
+HOSTS = ["h0", "h1", "h2", "h3"]
+
+
+def make_tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "embed": jnp.asarray(rng.randn(64, 16).astype(np.float32)),
+        "layers": {"w1": jnp.asarray(rng.randn(16, 32).astype(np.float32)),
+                   "w2": jnp.asarray(rng.randn(32, 16).astype(np.float32))},
+        "ln": jnp.asarray(rng.randn(16).astype(np.float32)),
+    }
+
+
+def host_payloads(tree, hosts):
+    parts = partition_leaves(tree, len(hosts))
+    return {h: pack_tree(tree, keys) for h, keys in zip(hosts, parts)}
+
+
+def test_pack_roundtrip():
+    tree = make_tree()
+    flat = unpack_tree(pack_tree(tree))
+    assert set(flat) == {"embed", "layers/w1", "layers/w2", "ln"}
+    np.testing.assert_array_equal(flat["embed"], np.asarray(tree["embed"]))
+
+
+def test_partition_covers_all_leaves_balanced():
+    tree = make_tree()
+    parts = partition_leaves(tree, 3)
+    all_keys = [k for p in parts for k in p]
+    assert sorted(all_keys) == sorted(unpack_tree(pack_tree(tree)).keys())
+
+
+def test_all_hosts_commit(tmp_path):
+    store = FileStore(str(tmp_path))
+    tree = make_tree()
+    payloads = host_payloads(tree, HOSTS)
+    outs = {}
+
+    def run(h):
+        ck = CornusCheckpointer(store, h, HOSTS, straggler_timeout_s=5.0)
+        outs[h] = ck.save(1, payloads[h])
+
+    ts = [threading.Thread(target=run, args=(h,)) for h in HOSTS]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert all(o.decision == Decision.COMMIT for o in outs.values()), outs
+    assert latest_committed(store, HOSTS) == 1
+
+    restored = restore_params(store, HOSTS, 1, jax.tree_util.tree_map(
+        jnp.zeros_like, tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_is_force_aborted_not_waited_on(tmp_path):
+    """h3 never shows up; peers resolve the epoch in bounded time by
+    CAS-writing ABORT into h3's slot (Theorem 4) — nobody blocks."""
+    store = FileStore(str(tmp_path))
+    payloads = host_payloads(make_tree(), HOSTS)
+    outs = {}
+    t0 = time.monotonic()
+
+    def run(h):
+        ck = CornusCheckpointer(store, h, HOSTS, straggler_timeout_s=0.3)
+        outs[h] = ck.save(2, payloads[h])
+
+    ts = [threading.Thread(target=run, args=(h,)) for h in HOSTS[:3]]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0, "termination must be bounded"
+    assert all(o.decision == Decision.ABORT for o in outs.values())
+    assert store.read_state("h3", _txn(2)) == Vote.ABORT
+    assert latest_committed(store, HOSTS) is None
+
+    # The straggler finally arrives: its LogOnce CAS-loses, it learns ABORT.
+    late = CornusCheckpointer(store, "h3", HOSTS)
+    out = late.save(2, payloads["h0"])
+    assert out.decision == Decision.ABORT
+
+
+def test_restart_resolves_inflight_epoch_without_blocking(tmp_path):
+    """Half the fleet dies after voting; a restarting job must settle the
+    epoch immediately (2PC would block on the dead coordinator)."""
+    store = FileStore(str(tmp_path))
+    payloads = host_payloads(make_tree(), HOSTS)
+    # Epoch 1 fully committed earlier.
+    for h in HOSTS:
+        CornusCheckpointer(store, h, HOSTS).vote(1, payloads[h])
+    # Epoch 2: only h0, h1 voted before the crash.
+    for h in HOSTS[:2]:
+        CornusCheckpointer(store, h, HOSTS).vote(2, payloads[h])
+
+    t0 = time.monotonic()
+    latest = latest_committed(store, HOSTS)
+    assert time.monotonic() - t0 < 2.0
+    assert latest == 1                      # epoch 2 force-aborted, not hung
+    assert store.read_state("h2", _txn(2)) == Vote.ABORT
+
+
+def test_concurrent_resolvers_agree(tmp_path):
+    """Many racing terminators (every host times out at once) — log-once
+    guarantees one consistent decision (the hypothesis-tested Lemma 1, now
+    over the real FileStore CAS)."""
+    store = FileStore(str(tmp_path))
+    payloads = host_payloads(make_tree(), HOSTS)
+    for h in HOSTS[:2]:
+        CornusCheckpointer(store, h, HOSTS).vote(3, payloads[h])
+    decisions = []
+    lock = threading.Lock()
+
+    def resolve(h):
+        ck = CornusCheckpointer(store, h, HOSTS)
+        d, _ = ck.terminate(3)
+        with lock:
+            decisions.append(d)
+
+    ts = [threading.Thread(target=resolve, args=(h,)) for h in HOSTS * 3]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert len(set(decisions)) == 1 and decisions[0] == Decision.ABORT
+
+
+def test_memorystore_cas_concurrency():
+    store = MemoryStore()
+    winners = []
+    lock = threading.Lock()
+
+    def racer(i):
+        r = store.log_once("p", "t", Vote.VOTE_YES if i % 2 else Vote.ABORT,
+                           writer=f"w{i}")
+        with lock:
+            winners.append(r)
+
+    ts = [threading.Thread(target=racer, args=(i,)) for i in range(16)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert len(set(winners)) == 1  # everyone observed the single first write
+
+
+def test_async_checkpointer_overlaps(tmp_path):
+    store = FileStore(str(tmp_path))
+    payloads = host_payloads(make_tree(), ["h0"])
+    ck = AsyncCheckpointer(CornusCheckpointer(store, "h0", ["h0"]))
+    ck.save(5, payloads["h0"])
+    outs = ck.join()
+    assert outs and outs[-1].decision == Decision.COMMIT
+    assert latest_committed(store, ["h0"]) == 5
+
+
+def test_elastic_restore_different_host_count(tmp_path):
+    """Written by 4 hosts, restored by a fleet of any size."""
+    store = FileStore(str(tmp_path))
+    tree = make_tree(seed=9)
+    payloads = host_payloads(tree, HOSTS)
+    for h in HOSTS:
+        CornusCheckpointer(store, h, HOSTS).vote(7, payloads[h])
+    assert latest_committed(store, HOSTS) == 7
+    template = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = restore_params(store, HOSTS, 7, template)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,171 @@
+"""Per-kernel allclose tests: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.mlstm_scan import mlstm_scan
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.key(key), shape).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+ATTN_SWEEP = [
+    # (B, Hq, Hkv, Sq, Skv, hd, causal, window, softcap)
+    (1, 2, 2, 64, 64, 32, True, 0, 0.0),      # MHA causal
+    (2, 4, 2, 128, 128, 16, True, 0, 0.0),    # GQA
+    (1, 2, 1, 96, 96, 32, True, 0, 0.0),      # ragged seq vs block
+    (1, 2, 2, 64, 64, 32, True, 32, 0.0),     # sliding window
+    (1, 2, 2, 64, 64, 32, True, 0, 50.0),     # softcap (gemma)
+    (1, 2, 2, 64, 64, 32, False, 0, 0.0),     # non-causal
+    (1, 8, 4, 160, 224, 64, True, 64, 30.0),  # everything at once, ragged
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", ATTN_SWEEP)
+def test_flash_attention_matches_ref(case, dtype):
+    B, Hq, Hkv, Sq, Skv, hd, causal, window, cap = case
+    q = rand(1, (B, Hq, Sq, hd), dtype)
+    k = rand(2, (B, Hkv, Skv, hd), dtype)
+    v = rand(3, (B, Hkv, Skv, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=32, block_kv=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=cap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_q_offset_matches_ref():
+    q = rand(4, (1, 2, 16, 32), jnp.float32)
+    k = rand(5, (1, 2, 64, 32), jnp.float32)
+    v = rand(6, (1, 2, 64, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_offset=48,
+                          block_q=16, block_kv=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+DECODE_SWEEP = [
+    # (B, Hq, Hkv, T, hd, kv_len)
+    (1, 2, 2, 128, 32, 100),
+    (2, 8, 2, 256, 64, 256),
+    (1, 4, 1, 96, 32, 17),     # ragged cache vs block
+    (3, 4, 4, 512, 16, 333),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", DECODE_SWEEP)
+def test_flash_decode_matches_ref(case, dtype):
+    B, Hq, Hkv, T, hd, kv_len = case
+    q = rand(7, (B, Hq, 1, hd), dtype)
+    k = rand(8, (B, Hkv, T, hd), dtype)
+    v = rand(9, (B, Hkv, T, hd), dtype)
+    got = flash_decode(q, k, v, jnp.int32(kv_len), block_kv=64,
+                       interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+MAMBA_SWEEP = [
+    # (B, S, di, N, chunk)
+    (1, 32, 64, 8, 8),
+    (2, 100, 128, 16, 16),     # ragged seq vs chunk
+    (1, 64, 256, 4, 64),       # single chunk
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", MAMBA_SWEEP)
+def test_mamba_scan_matches_ref(case, dtype):
+    B, S, di, N, chunk = case
+    u = rand(10, (B, S, di), dtype)
+    dt = jax.nn.softplus(rand(11, (B, S, di), jnp.float32)).astype(dtype)
+    a = -jnp.exp(rand(12, (di, N), jnp.float32) * 0.5)
+    b = rand(13, (B, S, N), dtype)
+    c = rand(14, (B, S, N), dtype)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    y, h = mamba_scan(u, dt, a, b, c, h0, chunk=chunk, di_block=di,
+                      interpret=True)
+    y_ref, h_ref = ref.mamba_scan_ref(u, dt, a, b, c, h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_mamba_scan_carries_state_across_calls():
+    B, S, di, N = 1, 48, 32, 8
+    u = rand(20, (B, S, di), jnp.float32)
+    dt = jax.nn.softplus(rand(21, (B, S, di), jnp.float32))
+    a = -jnp.exp(rand(22, (di, N), jnp.float32) * 0.5)
+    b = rand(23, (B, S, N), jnp.float32)
+    c = rand(24, (B, S, N), jnp.float32)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    y_full, h_full = mamba_scan(u, dt, a, b, c, h0, chunk=16, di_block=di,
+                                interpret=True)
+    y1, h1 = mamba_scan(u[:, :24], dt[:, :24], a, b[:, :24], c[:, :24], h0,
+                        chunk=16, di_block=di, interpret=True)
+    y2, h2 = mamba_scan(u[:, 24:], dt[:, 24:], a, b[:, 24:], c[:, 24:], h1,
+                        chunk=16, di_block=di, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+MLSTM_SWEEP = [
+    # (B, S, H, hd, chunk)
+    (1, 32, 2, 16, 8),
+    (2, 80, 4, 32, 16),        # ragged seq vs chunk
+    (1, 64, 1, 64, 64),        # single chunk
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", MLSTM_SWEEP)
+def test_mlstm_matches_sequential_ref(case, dtype):
+    B, S, H, hd, chunk = case
+    q = rand(30, (B, S, H, hd), dtype)
+    k = rand(31, (B, S, H, hd), dtype)
+    v = rand(32, (B, S, H, hd), dtype)
+    i_gate = jax.nn.sigmoid(rand(33, (B, S, H), jnp.float32))
+    f_gate = jax.nn.sigmoid(rand(34, (B, S, H), jnp.float32) + 2.0)
+    c0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, c_last = mlstm_scan(q, k, v, i_gate.astype(dtype),
+                           f_gate.astype(dtype), c0, chunk=chunk,
+                           interpret=True)
+    y_ref, c_ref, _ = ref.mlstm_ref(q, k, v, i_gate, f_gate, c0,
+                                    jnp.zeros((B, H, hd), jnp.float32))
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(c_last), np.asarray(c_ref),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,78 @@
+"""End-to-end trainer tests: loss goes down, checkpoints commit, a mid-epoch
+crash restarts EXACTLY (the Cornus restore + stateless pipeline combination),
+and elastic restarts onto different fleet sizes work.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_committed
+from repro.core.state import Decision
+from repro.core.storage import FileStore
+from repro.launch.train import (MidCheckpointCrash, RunConfig, RunResult,
+                                train, _hosts)
+
+
+def base_run(tmp, **kw):
+    d = dict(arch="llama3.2-1b", steps=24, batch=4, seq_len=64,
+             ckpt_every=8, ckpt_dir=str(tmp), n_hosts=3, log_every=0,
+             lr=3e-3, seed=7)
+    d.update(kw)
+    return RunConfig(**d)
+
+
+def test_loss_decreases_and_ckpts_commit(tmp_path):
+    res = train(base_run(tmp_path))
+    assert res.steps_done == 24
+    first = np.mean(res.losses[:4])
+    last = np.mean(res.losses[-4:])
+    assert last < first, f"no learning: {first} -> {last}"
+    assert len(res.ckpt_outcomes) == 3
+    assert all(o.decision == Decision.COMMIT for o in res.ckpt_outcomes)
+    store = FileStore(str(tmp_path))
+    assert latest_committed(store, _hosts(3)) == 24
+
+
+def test_crash_restart_is_exact(tmp_path):
+    """Kill mid-checkpoint at step 16; restart must resolve the in-flight
+    epoch (force-abort), restore epoch 8, and REPRODUCE the uncrashed loss
+    curve exactly — checkpoint+data determinism end-to-end."""
+    golden = train(base_run(tmp_path / "golden"))
+
+    with pytest.raises(MidCheckpointCrash):
+        train(base_run(tmp_path / "crash", die_mid_checkpoint_at=16))
+    store = FileStore(str(tmp_path / "crash"))
+    # In-flight epoch 16 resolves to ABORT; epoch 8 is the restore point.
+    assert latest_committed(store, _hosts(3)) == 8
+
+    resumed = train(base_run(tmp_path / "crash", resume=True))
+    assert resumed.restored_from == 8
+    # Steps 8..24 must match the golden run bit-for-bit (same data, same
+    # restored state). Compare the overlapping region.
+    np.testing.assert_allclose(resumed.losses, golden.losses[8:], rtol=1e-5)
+
+
+def test_elastic_restart_smaller_fleet(tmp_path):
+    train(base_run(tmp_path, steps=8, ckpt_every=8, n_hosts=4))
+    res = train(base_run(tmp_path, steps=16, ckpt_every=8, n_hosts=2,
+                         resume=True))
+    # restore read the 4-host epoch, then the 2-host fleet kept going
+    assert res.restored_from == 8
+    assert res.steps_done == 16
+    store = FileStore(str(tmp_path))
+    assert latest_committed(store, _hosts(2)) == 16
+
+
+def test_async_checkpoint_commits(tmp_path):
+    res = train(base_run(tmp_path, async_ckpt=True))
+    assert res.ckpt_outcomes and all(
+        o.decision == Decision.COMMIT for o in res.ckpt_outcomes)
+
+
+def test_byte_corpus_training(tmp_path):
+    """Train on real bytes (this test file) — loss must drop fast on code."""
+    src = os.path.abspath(__file__)
+    res = train(base_run(tmp_path, data_source=f"bytes:{src}", steps=30,
+                         ckpt_every=30))
+    assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5])
