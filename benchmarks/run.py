@@ -13,10 +13,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on bench name")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced issue windows / txn counts (CI smoke)")
     ap.add_argument("--dryrun-dir", default="artifacts/dryrun")
     args = ap.parse_args()
 
     from . import paper_figs, roofline, ckpt_bench
+
+    paper_figs.QUICK = args.quick
 
     benches = [(f.__name__, f) for f in paper_figs.ALL]
     benches.append(("ckpt_commit", ckpt_bench.run))

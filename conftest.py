@@ -1,9 +1,53 @@
 import os
 import sys
 
+import pytest
+
 # Make `benchmarks` (and `repro` when PYTHONPATH is missing) importable
 # regardless of how pytest is invoked.
 ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (ROOT, os.path.join(ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def hypothesis_or_stubs():
+    """(has_hypothesis, given, settings, st) — real hypothesis when
+    installed, otherwise stand-ins that let strategy expressions parse at
+    module scope and mark each @given test as skipped.  hypothesis is a
+    dev-only dependency (requirements-dev.txt); test modules using it must
+    still collect without it.  Usage:
+
+        from conftest import hypothesis_or_stubs
+        HAS_HYPOTHESIS, given, settings, st = hypothesis_or_stubs()
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return True, given, settings, st
+    except ImportError:
+        class _AnyStrategy:
+            """Stands in for any strategy expression at module scope."""
+
+            def __call__(self, *a, **k):
+                return self
+
+            def __getattr__(self, name):
+                return self
+
+        def given(*a, **k):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        return False, given, settings, _AnyStrategy()
+
+
+def pytest_configure(config):
+    # `slow` marks the long-running sim/train tests.  pytest.ini deselects
+    # them by default (addopts = -m "not slow") so the tier-1 suite stays
+    # fast; run everything with:  python -m pytest -m ""
+    config.addinivalue_line(
+        "markers",
+        'slow: long-running sim/train test, deselected by default '
+        '(override with -m "")')

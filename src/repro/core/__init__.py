@@ -10,15 +10,22 @@ Public surface:
 from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
 from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
-                      COMPUTE_RTT_MS, SLOW_REDIS, FileStore, LatencyModel,
-                      MemoryStore, SimStorage)
+                      COMPUTE_RTT_MS, CROSS_REGION, CROSS_ZONE, INTRA_ZONE,
+                      SLOW_REDIS, FileStore, LatencyModel, MemoryStore,
+                      QuorumUnavailable, RegionTopology, ReplicaLog,
+                      ReplicatedSimStorage, ReplicatedStore, SimStorage,
+                      merge_reads)
 from .protocol import Cluster, ProtocolConfig
-from .variants import CoordinatorLogCluster, predicted_caller_latency_ms, rtt_table
+from .variants import (CoordinatorLogCluster, measured_caller_latency_ms,
+                       predicted_caller_latency_ms, rtt_table)
 
 __all__ = [
     "Sim", "Decision", "TxnOutcome", "TxnSpec", "Vote", "global_decision",
     "MemoryStore", "FileStore", "SimStorage", "LatencyModel",
     "AZURE_REDIS", "AZURE_BLOB", "AZURE_BLOB_SEPARATE_ACL", "SLOW_REDIS",
     "COMPUTE_RTT_MS", "Cluster", "ProtocolConfig", "CoordinatorLogCluster",
-    "rtt_table", "predicted_caller_latency_ms",
+    "rtt_table", "predicted_caller_latency_ms", "measured_caller_latency_ms",
+    "RegionTopology", "INTRA_ZONE", "CROSS_ZONE", "CROSS_REGION",
+    "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
+    "QuorumUnavailable",
 ]

@@ -23,7 +23,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote
-from .storage import COMPUTE_RTT_MS, SimStorage
+from .storage import COMPUTE_RTT_MS, RegionTopology, SimStorage
 
 
 @dataclass
@@ -40,6 +40,18 @@ class ProtocolConfig:
     # precommit instead of at decision. Consumed by the txn executor via the
     # on_precommit hook.
     elr: bool = False
+    # Geo-distributed deployments (extended §6): per-link RTTs come from a
+    # RegionTopology + node→region placement instead of the scalar rtt_ms.
+    topology: Optional[RegionTopology] = None
+    placement: Dict[str, str] = field(default_factory=dict)
+
+    def link_rtt_ms(self, src: str, dst: str) -> float:
+        """Round trip between two compute nodes under the active model."""
+        if self.topology is None:
+            return self.rtt_ms
+        default = self.topology.regions[0]
+        return self.topology.rtt_ms(self.placement.get(src, default),
+                                    self.placement.get(dst, default))
 
 
 class Cluster:
@@ -89,7 +101,7 @@ class Cluster:
         """One-way message; delivered after rtt/2 if both ends are alive."""
         if not self.alive(src):
             return
-        delay = 0.0 if src == dst else self.cfg.rtt_ms / 2.0
+        delay = 0.0 if src == dst else self.cfg.link_rtt_ms(src, dst) / 2.0
         slot = self._slot(dst, txn, kind)
 
         def deliver():
@@ -457,7 +469,7 @@ class Cluster:
         """Peer-side handler for cooperative termination (runs as a server
         thread, so it is modelled at delivery time rather than inside the
         peer's protocol process)."""
-        delay = self.cfg.rtt_ms / 2.0
+        delay = self.cfg.link_rtt_ms(asker, server) / 2.0
 
         def handle():
             if not self.alive(server):
@@ -484,7 +496,7 @@ class Cluster:
 
         def proc():
             txn = spec.txn_id
-            state = yield self.storage.read_state(me, txn)
+            state = yield self.storage.read_state(me, txn, writer=me)
             out = TxnOutcome(txn_id=txn, node=me,
                              decision=Decision.UNDETERMINED)
             if state in (Vote.COMMIT, Vote.ABORT):

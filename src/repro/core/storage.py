@@ -23,11 +23,13 @@ separation between data and txn-state (§4) is what the ``acl`` flag models.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import random
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .state import Vote
 
@@ -74,6 +76,62 @@ SLOW_REDIS = LatencyModel("slow-redis", conditional_write_ms=443.0,
                           plain_write_ms=443.0, read_ms=221.0)
 
 COMPUTE_RTT_MS = 0.5  # measured compute↔compute round trip (§5.1.2)
+
+
+# --------------------------------------------------------------------------
+# Region topology (extended version §6: geo-distributed deployments)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RegionTopology:
+    """Multi-region RTT matrix replacing the single scalar ``rtt_ms``.
+
+    ``rtt_ms(a, b)`` is the full round trip between two regions: ``intra_ms``
+    within a region, an explicit entry of ``links`` across regions (keyed by
+    the sorted region pair), else ``default_cross_ms``.  Presets below model
+    the three deployment shapes of the extended paper: intra-zone (the §5
+    measurement setup), cross-zone, and cross-region (geo).
+    """
+
+    name: str
+    regions: Tuple[str, ...]
+    intra_ms: float = COMPUTE_RTT_MS
+    links: Mapping[Tuple[str, str], float] = field(default_factory=dict)
+    default_cross_ms: float = 2.0
+
+    def rtt_ms(self, a: str, b: str) -> float:
+        if a == b:
+            return self.intra_ms
+        key = (a, b) if a <= b else (b, a)
+        return self.links.get(key, self.default_cross_ms)
+
+    @property
+    def max_rtt_ms(self) -> float:
+        worst = max(self.intra_ms, self.default_cross_ms)
+        return max([worst] + list(self.links.values()))
+
+    @classmethod
+    def uniform(cls, name: str, regions: Sequence[str],
+                rtt_ms: float) -> "RegionTopology":
+        """Every pair (including intra-region) costs the same RTT — used to
+        validate the simulator against the analytic Table-3 RTT counts."""
+        return cls(name, tuple(regions), intra_ms=rtt_ms,
+                   default_cross_ms=rtt_ms)
+
+    def place_round_robin(self, nodes: Sequence[str]) -> Dict[str, str]:
+        return {n: self.regions[i % len(self.regions)]
+                for i, n in enumerate(nodes)}
+
+
+INTRA_ZONE = RegionTopology("intra-zone", ("zone-a",))
+CROSS_ZONE = RegionTopology("cross-zone", ("zone-a", "zone-b", "zone-c"),
+                            default_cross_ms=2.0)
+# Public-cloud-shaped inter-region RTTs (coordinator home region first).
+CROSS_REGION = RegionTopology(
+    "cross-region", ("us-east", "us-west", "eu-west"),
+    links={("us-east", "us-west"): 62.0,
+           ("eu-west", "us-east"): 76.0,
+           ("eu-west", "us-west"): 140.0},
+    default_cross_ms=100.0)
 
 
 # --------------------------------------------------------------------------
@@ -254,7 +312,9 @@ class SimStorage:
         ms = self.model.sample(self.rng, self.model.plain_write_ms)
         return self._op(ms, lambda: self.store.log(partition, txn, state, writer))
 
-    def read_state(self, partition: str, txn: str):
+    def read_state(self, partition: str, txn: str, writer: str = ""):
+        # `writer` (the calling node) is unused here but part of the storage
+        # API: the replicated store derives the caller's region from it.
         ms = self.model.sample(self.rng, self.model.read_ms)
         return self._op(ms, lambda: self.store.read_state(partition, txn))
 
@@ -270,3 +330,617 @@ class SimStorage:
             1.0 + self.model.batch_size_factor * max(0, n_records - 1))
         ms = self.model.sample(self.rng, mean)
         return self._op(ms, lambda: self.store.log(partition, txn, state, writer))
+
+
+# --------------------------------------------------------------------------
+# Replicated storage: quorum LogOnce over R replica logs (extended §6)
+# --------------------------------------------------------------------------
+# The extended paper argues Cornus ports to replicated storage services where
+# LogOnce becomes a quorum operation: "the first value accepted by a majority
+# of replicas wins" (Paxos-Commit-style, Gray & Lamport).  We implement the
+# slot register as single-decree Paxos per (partition, txn): ballots make the
+# participant-vs-termination CAS race safe under any interleaving of replica
+# failures, which plain first-write-wins replicas cannot guarantee (a 1-1
+# split across a 2-of-3 quorum has no winner without a second round).
+#
+# Ballots are ``(round, proposer_id)`` tuples.  Every slot has one *natural
+# owner* holding an implicit promise for OWNER_BALLOT — the slot's partition
+# owner when compute coordinates replication ("coloc", the paper's
+# participant-coordinates-replication rows of Table 3), or the storage
+# service's initial leader replica in leader mode.  The owner skips phase 1
+# (1 round trip); every other proposer — and any post-failover leader — runs
+# the full prepare+accept (2 round trips), exactly the accounting behind
+# Table 3's 2pc=5 / cornus=3 / 2pc-coloc=3 / cornus-coloc=2 RTT totals.
+
+Ballot = Tuple[int, int]
+OWNER_BALLOT: Ballot = (1, 0)
+
+
+class QuorumUnavailable(RuntimeError):
+    """Fewer than a majority of replicas reachable (or proposer starved)."""
+
+
+class _Slot:
+    """Per-(partition, txn) state on ONE replica."""
+
+    __slots__ = ("promised", "acc_ballot", "acc_value", "decided",
+                 "value", "gen", "writer")
+
+    def __init__(self) -> None:
+        self.promised: Ballot = OWNER_BALLOT   # implicit phase-1 for owner
+        self.acc_ballot: Optional[Ballot] = None
+        self.acc_value: Optional[Vote] = None
+        self.decided = False
+        self.value: Optional[Vote] = None      # visible log record
+        self.gen = 0                           # owner-assigned LSN of `value`
+        self.writer = ""
+
+
+class ReplicaLog:
+    """One storage replica: a Paxos acceptor plus a visible MemoryStore-like
+    log.  The first value of a slot is fixed by consensus (log_once); later
+    blind ``write``s overwrite it with sticky-decision semantics (the 2PC /
+    decision-record path).  Thread-safe; liveness is tracked by the enclosing
+    store, a failed replica simply stops being called (disk survives)."""
+
+    def __init__(self, index: int) -> None:
+        self.index = index
+        self._lock = threading.Lock()
+        self._slots: Dict[Tuple[str, str], _Slot] = {}
+        self._data_bytes: Dict[str, int] = {}
+
+    def _slot(self, key: Tuple[str, str]) -> _Slot:
+        s = self._slots.get(key)
+        if s is None:
+            s = self._slots[key] = _Slot()
+        return s
+
+    # -- acceptor ----------------------------------------------------------
+    def prepare(self, key, ballot: Ballot):
+        """-> (ok, acc_ballot, acc_value, visible_value, gen, decided)."""
+        with self._lock:
+            s = self._slot(key)
+            ok = ballot > s.promised
+            if ok:
+                s.promised = ballot
+            return (ok, s.acc_ballot, s.acc_value, s.value, s.gen, s.decided)
+
+    def accept(self, key, ballot: Ballot, value: Vote) -> bool:
+        with self._lock:
+            s = self._slot(key)
+            if ballot < s.promised:
+                return False
+            if s.acc_ballot == ballot and s.acc_value not in (None, value):
+                return False   # same-ballot different-value: never diverge
+            s.promised = ballot
+            s.acc_ballot, s.acc_value = ballot, value
+            return True
+
+    def learn(self, key, value: Vote, writer: str = "") -> None:
+        """Decision reached at a quorum: pin the slot's first value."""
+        with self._lock:
+            s = self._slot(key)
+            s.decided = True
+            if s.gen == 0:
+                s.value, s.gen, s.writer = value, 1, writer
+
+    # -- visible log -------------------------------------------------------
+    def write(self, key, value: Vote, gen: int, writer: str = "") -> Vote:
+        """Blind overwrite at generation ``gen``; decisions never regress."""
+        with self._lock:
+            s = self._slot(key)
+            if (s.value is not None and s.value.is_decision()
+                    and not value.is_decision()):
+                return s.value
+            if gen > s.gen:
+                s.value, s.gen, s.writer = value, gen, writer
+            return s.value if s.value is not None else value
+
+    def read(self, key):
+        with self._lock:
+            s = self._slots.get(key)
+            if s is None:
+                return (None, 0, False)
+            return (s.value, s.gen, s.decided)
+
+    def repair(self, key, value: Vote, gen: int, decided: bool,
+               writer: str = "") -> None:
+        """Read-repair push: adopt a fresher-or-equal merged view."""
+        with self._lock:
+            s = self._slot(key)
+            if decided:
+                s.decided = True
+            if gen > s.gen or (s.value is None and value is not None):
+                s.value, s.gen, s.writer = value, max(gen, 1), writer
+
+    def log_data(self, partition: str, nbytes: int) -> None:
+        with self._lock:
+            self._data_bytes[partition] = \
+                self._data_bytes.get(partition, 0) + nbytes
+
+    def keys(self):
+        with self._lock:
+            return list(self._slots.keys())
+
+
+def merge_reads(reads: Sequence[Tuple[Optional[Vote], int, bool]]):
+    """Merge per-replica (value, gen, decided) into one view.
+
+    A decision record anywhere wins (decisions are unique and sticky);
+    otherwise the freshest (max-gen) record; `decided` is OR-ed.
+    """
+    value, gen, decided = None, 0, False
+    for v, g, d in reads:
+        decided = decided or d
+        if v is None:
+            continue
+        better = (value is None or g > gen
+                  or (v.is_decision() and not value.is_decision()))
+        if value is not None and value.is_decision() and not v.is_decision():
+            better = False
+        if better:
+            value, gen = v, g
+    return value, gen, decided
+
+
+class ReplicatedStore:
+    """Majority-quorum store over R ``ReplicaLog``s (threaded deployments).
+
+    Same three-operation surface as ``MemoryStore``; ``log_once`` runs the
+    Paxos proposer synchronously against the alive replicas, ``log`` is a
+    quorum overwrite with owner-assigned generations, ``read_state`` is a
+    quorum read with lazy repair of stale replicas.  ``fail_replica`` /
+    ``recover_replica`` model per-replica outages; state survives an outage
+    (crash, not amnesia), recovered replicas catch up via read repair.
+    """
+
+    def __init__(self, n_replicas: int = 3, seed: int = 0,
+                 max_rounds: int = 256) -> None:
+        assert n_replicas >= 1
+        self.replicas = [ReplicaLog(i) for i in range(n_replicas)]
+        self._alive = [True] * n_replicas
+        self._gens: Dict[Tuple[str, str], int] = {}
+        self._glock = threading.Lock()
+        self._pids = itertools.count(1)
+        self._rng = random.Random(seed)
+        self.max_rounds = max_rounds
+        self.cas_attempts = 0
+        self.cas_losses = 0
+
+    @property
+    def n(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def quorum(self) -> int:
+        return self.n // 2 + 1
+
+    # -- replica liveness --------------------------------------------------
+    def fail_replica(self, i: int) -> None:
+        self._alive[i] = False
+
+    def recover_replica(self, i: int) -> None:
+        self._alive[i] = True
+
+    def alive_replicas(self) -> List[ReplicaLog]:
+        return [r for i, r in enumerate(self.replicas) if self._alive[i]]
+
+    # -- quorum read -------------------------------------------------------
+    def _read_merge(self, key):
+        alive = self.alive_replicas()
+        reads = [(r, r.read(key)) for r in alive]
+        value, gen, decided = merge_reads([rd for _, rd in reads])
+        if value is not None or decided:
+            for r, (v, g, d) in reads:       # stale-replica read repair
+                if g < gen or (decided and not d):
+                    r.repair(key, value, gen, decided)
+        return value, gen, decided, len(alive)
+
+    # -- operations --------------------------------------------------------
+    def log_once(self, partition: str, txn: str, state: Vote,
+                 writer: str = "") -> Vote:
+        key = (partition, txn)
+        self.cas_attempts += 1
+        value, _, decided, n_alive = self._read_merge(key)
+        if n_alive < self.quorum:
+            raise QuorumUnavailable(f"{n_alive}/{self.n} replicas alive")
+        if value is not None and (decided or value.is_decision()):
+            if value != state:
+                self.cas_losses += 1
+            return value
+        first = self._propose(key, state, owner=(writer == partition))
+        if first != state:
+            self.cas_losses += 1
+            return first
+        # The decided first value may already have been overwritten by a
+        # decision record (can't happen before we return in the protocols,
+        # but a quorum read keeps the API honest).
+        value, _, _, _ = self._read_merge(key)
+        return value if value is not None else first
+
+    def _propose(self, key, my_value: Vote, owner: bool) -> Vote:
+        pid = None
+        for attempt in range(self.max_rounds):
+            alive = self.alive_replicas()
+            if len(alive) < self.quorum:
+                raise QuorumUnavailable("majority down during propose")
+            adopted = my_value
+            if owner and attempt == 0:
+                ballot = OWNER_BALLOT          # implicit phase 1
+                voters = alive
+            else:
+                if pid is None:
+                    pid = next(self._pids)
+                ballot = (attempt + 2, pid)
+                voters, best, seen = [], None, None
+                for r in alive:
+                    ok, ab, av, vis, gen, decided = r.prepare(key, ballot)
+                    if vis is not None and decided:
+                        return vis             # already chosen and visible
+                    if ok:
+                        voters.append(r)
+                    if av is not None and (best is None or ab > best[0]):
+                        best = (ab, av)
+                    if vis is not None and seen is None:
+                        seen = vis
+                if len(voters) < self.quorum:
+                    time.sleep(self._rng.random() * 1e-4 * (attempt + 1))
+                    continue
+                adopted = best[1] if best else (seen or my_value)
+            acks = sum(1 for r in voters if r.accept(key, ballot, adopted))
+            if acks >= self.quorum:
+                for r in self.alive_replicas():
+                    r.learn(key, adopted)
+                return adopted
+            time.sleep(self._rng.random() * 1e-4 * (attempt + 1))
+        raise QuorumUnavailable(f"no decision after {self.max_rounds} rounds")
+
+    def log(self, partition: str, txn: str, state: Vote,
+            writer: str = "") -> Vote:
+        key = (partition, txn)
+        cur, gen, decided, n_alive = self._read_merge(key)
+        if n_alive < self.quorum:
+            raise QuorumUnavailable(f"{n_alive}/{self.n} replicas alive")
+        if cur is not None and cur.is_decision() and not state.is_decision():
+            return cur
+        with self._glock:
+            g = self._gens[key] = max(self._gens.get(key, 0), gen) + 1
+        results = [r.write(key, state, g, writer)
+                   for r in self.alive_replicas()]
+        if len(results) < self.quorum:
+            raise QuorumUnavailable("majority down during log")
+        return state
+
+    def read_state(self, partition: str, txn: str) -> Optional[Vote]:
+        value, _, _, n_alive = self._read_merge((partition, txn))
+        if n_alive < self.quorum:
+            raise QuorumUnavailable(f"{n_alive}/{self.n} replicas alive")
+        return value
+
+    def log_data(self, partition: str, nbytes: int) -> None:
+        for r in self.alive_replicas():
+            r.log_data(partition, nbytes)
+
+    def snapshot(self) -> Dict[Tuple[str, str], Vote]:
+        """Merged view over every replica's disk — ground truth for tests
+        and recovery tooling.  Deliberately includes down replicas (crash,
+        not amnesia): a quorum-committed record must show up even while the
+        replicas that hold it are offline."""
+        keys = set()
+        for r in self.replicas:
+            keys.update(r.keys())
+        out = {}
+        for k in keys:
+            v, _, _ = merge_reads([r.read(k) for r in self.replicas])
+            if v is not None:
+                out[k] = v
+        return out
+
+
+class ReplicatedSimStorage:
+    """Quorum-replicated storage service inside the discrete-event sim.
+
+    Drop-in for ``SimStorage``: ``log_once`` / ``log`` / ``read_state`` /
+    ``log_batch`` return sim Events, so ``Cluster`` / ``CoordinatorLogCluster``
+    run unmodified against it.  R replica endpoints each have a region (RTTs
+    from ``RegionTopology``), the shared ``LatencyModel`` service times, and a
+    per-replica fail/recover schedule; a request completes on the *quorum-th*
+    fastest acknowledgement, not the slowest replica.
+
+    Two deployment modes mirror Table 3:
+      * ``leader`` — callers route to the lowest-index alive replica; the
+        initial leader owns every slot's implicit phase-1 (writes cost
+        caller→leader + one accept round), a post-failover leader pays the
+        full prepare+accept.
+      * ``coloc``  — compute coordinates replication: the partition owner
+        proposes directly to the replicas (its own vote costs one quorum
+        round); termination CAS by peers pays both phases.
+
+    Caller identity (for region lookup and slot ownership) rides on the
+    ``writer`` argument the protocols already pass.
+    """
+
+    def __init__(self, sim, model: LatencyModel, n_replicas: int = 3,
+                 seed: int = 0, topology: Optional[RegionTopology] = None,
+                 replica_regions: Optional[Sequence[str]] = None,
+                 placement: Optional[Mapping[str, str]] = None,
+                 mode: str = "leader",
+                 op_timeout_ms: Optional[float] = None) -> None:
+        assert mode in ("leader", "coloc")
+        self.sim = sim
+        self.model = model
+        self.n = n_replicas
+        self.quorum = n_replicas // 2 + 1
+        self.topology = topology or INTRA_ZONE
+        regs = self.topology.regions
+        self.replica_regions = (list(replica_regions) if replica_regions
+                                else [regs[i % len(regs)]
+                                      for i in range(n_replicas)])
+        assert len(self.replica_regions) == n_replicas
+        self.placement = dict(placement or {})
+        self.mode = mode
+        self.replicas = [ReplicaLog(i) for i in range(n_replicas)]
+        self.fail_at = [float("inf")] * n_replicas
+        self.recover_at = [float("inf")] * n_replicas
+        self.rng = random.Random(seed)
+        self._pids = itertools.count(1)
+        self._gens: Dict[Tuple[str, str], int] = {}
+        self.requests = 0
+        self.op_timeout_ms = op_timeout_ms or (
+            3.0 * self.topology.max_rtt_ms
+            + 12.0 * model.conditional_write_ms + 8.0)
+
+    # -- replica liveness (sim-time schedules, like Cluster nodes) ---------
+    def fail_replica(self, i: int, at: float = 0.0,
+                     recover_at: float = float("inf")) -> None:
+        self.fail_at[i] = at
+        self.recover_at[i] = recover_at
+
+    def replica_alive(self, i: int) -> bool:
+        t = self.sim.now
+        return t < self.fail_at[i] or t >= self.recover_at[i]
+
+    def _leader_idx(self) -> Optional[int]:
+        for i in range(self.n):
+            if self.replica_alive(i):
+                return i
+        return None
+
+    def _region_of(self, node: str) -> str:
+        return self.placement.get(node, self.topology.regions[0])
+
+    def _backoff(self, attempt: int) -> float:
+        return min(2.0 ** attempt, 8.0) * (0.5 + self.rng.random())
+
+    # -- scatter/gather RPC layer ------------------------------------------
+    def _scatter(self, src_region: str, fn, mean_ms: float, done_pred,
+                 self_idx: Optional[int] = None):
+        """Send ``fn(replica, i)`` to every replica; the returned Event
+        triggers with [(i, result), ...] once ``done_pred`` is satisfied,
+        all replicas answered, or ``op_timeout_ms`` elapsed.  A replica dead
+        at apply time silently drops the request."""
+        done = self.sim.event()
+        acc = {"resps": [], "count": 0}
+
+        def finish_if(ready: bool) -> None:
+            if not done.triggered and ready:
+                done.trigger(list(acc["resps"]))
+
+        for i in range(self.n):
+            net = (0.0 if i == self_idx
+                   else self.topology.rtt_ms(
+                       src_region, self.replica_regions[i]) / 2.0)
+            service = self.model.sample(self.rng, mean_ms)
+
+            def apply(i=i, net=net, service=service):
+                if not self.replica_alive(i):
+                    return
+                val = fn(self.replicas[i], i)
+
+                def respond(i=i, val=val):
+                    acc["resps"].append((i, val))
+                    acc["count"] += 1
+                    finish_if(done_pred(acc["resps"])
+                              or acc["count"] >= self.n)
+
+                self.sim._schedule(self.sim.now + net, respond)
+
+            self.sim._schedule(self.sim.now + net + service, apply)
+        self.sim._schedule(self.sim.now + self.op_timeout_ms,
+                           lambda: finish_if(True))
+        return done
+
+    def _cast(self, src_region: str, fn, mean_ms: float,
+              self_idx: Optional[int] = None,
+              only: Optional[Sequence[int]] = None) -> None:
+        """Fire-and-forget apply (learn / read-repair pushes)."""
+        for i in range(self.n):
+            if only is not None and i not in only:
+                continue
+            net = (0.0 if i == self_idx
+                   else self.topology.rtt_ms(
+                       src_region, self.replica_regions[i]) / 2.0)
+            service = self.model.sample(self.rng, mean_ms)
+
+            def apply(i=i, net=net, service=service):
+                if self.replica_alive(i):
+                    fn(self.replicas[i], i)
+
+            self.sim._schedule(self.sim.now + net + service, apply)
+
+    # -- leader routing ----------------------------------------------------
+    def _via_leader(self, caller: str, inner):
+        """Route one op through the current leader; retries over failover.
+        (Leader death mid-round is modelled at op granularity: the caller's
+        scatter just runs from the leader's region.)"""
+        src = self._region_of(caller)
+        while True:
+            li = self._leader_idx()
+            if li is None:
+                yield self.sim.timeout(self.op_timeout_ms)
+                continue
+            lr = self.replica_regions[li]
+            yield self.sim.timeout(self.topology.rtt_ms(src, lr) / 2.0)
+            if not self.replica_alive(li):   # died while request in flight
+                yield self.sim.timeout(self.op_timeout_ms / 4.0)
+                continue
+            result = yield from inner(li, lr)
+            yield self.sim.timeout(self.topology.rtt_ms(lr, src) / 2.0)
+            return result
+
+    # -- quorum ops (generators run from src_region) -----------------------
+    def _prep_quorum(self, resps) -> bool:
+        oks = sum(1 for _, (ok, *_rest) in resps if ok)
+        shortcut = any(vis is not None and decided
+                       for _, (_ok, _ab, _av, vis, _g, decided) in resps)
+        return oks >= self.quorum or shortcut
+
+    def _quorum_log_once(self, src_region: str, self_idx: Optional[int],
+                         owner_fast: bool, key, state: Vote, writer: str):
+        pid = None
+        attempt = 0
+        while True:
+            adopted = state
+            if owner_fast and attempt == 0:
+                ballot = OWNER_BALLOT
+            else:
+                if pid is None:
+                    pid = next(self._pids)
+                ballot = (attempt + 2, pid)
+                resps = yield self._scatter(
+                    src_region,
+                    lambda r, i, b=ballot: r.prepare(key, b),
+                    self.model.read_ms, self._prep_quorum, self_idx)
+                oks, best, seen = 0, None, None
+                for _, (ok, ab, av, vis, _g, decided) in resps:
+                    if vis is not None and decided:
+                        return vis            # first value already chosen
+                    oks += 1 if ok else 0
+                    if av is not None and (best is None or ab > best[0]):
+                        best = (ab, av)
+                    if vis is not None and seen is None:
+                        seen = vis
+                if oks < self.quorum:
+                    attempt += 1
+                    yield self.sim.timeout(self._backoff(attempt))
+                    continue
+                adopted = best[1] if best else (seen or state)
+            resps = yield self._scatter(
+                src_region,
+                lambda r, i, b=ballot, v=adopted: r.accept(key, b, v),
+                self.model.conditional_write_ms,
+                lambda rs: sum(1 for _, ok in rs if ok) >= self.quorum,
+                self_idx)
+            if sum(1 for _, ok in resps if ok) >= self.quorum:
+                self._cast(src_region,
+                           lambda r, i, v=adopted: r.learn(key, v, writer),
+                           self.model.plain_write_ms, self_idx)
+                self._gens[key] = max(self._gens.get(key, 1), 1)
+                return adopted
+            attempt += 1
+            yield self.sim.timeout(self._backoff(attempt))
+
+    def _quorum_write(self, src_region: str, self_idx: Optional[int],
+                      key, state: Vote, writer: str, mean_ms: float):
+        g = self._gens.get(key, 1) + 1   # owner-assigned LSN (single writer)
+        self._gens[key] = g
+        while True:
+            resps = yield self._scatter(
+                src_region,
+                lambda r, i: r.write(key, state, g, writer), mean_ms,
+                lambda rs: len(rs) >= self.quorum, self_idx)
+            if len(resps) >= self.quorum:
+                return state
+            yield self.sim.timeout(self._backoff(1))
+
+    def _quorum_read(self, src_region: str, self_idx: Optional[int], key):
+        while True:
+            resps = yield self._scatter(
+                src_region, lambda r, i: r.read(key), self.model.read_ms,
+                lambda rs: len(rs) >= self.quorum, self_idx)
+            if len(resps) < self.quorum:
+                yield self.sim.timeout(self._backoff(1))
+                continue
+            value, gen, decided = merge_reads([v for _, v in resps])
+            if value is not None or decided:
+                # Anti-entropy push to every replica (repair is idempotent
+                # adopt-if-newer): replicas that answered after the quorum
+                # or were down at apply time catch up on the next read.
+                self._cast(src_region,
+                           lambda r, i: r.repair(key, value, gen, decided),
+                           self.model.plain_write_ms, self_idx)
+            return value
+
+    # -- public SimStorage-compatible API ----------------------------------
+    def log_once(self, partition: str, txn: str, state: Vote,
+                 writer: str = ""):
+        self.requests += 1
+        key = (partition, txn)
+
+        def gen():
+            if self.mode == "coloc":
+                owner = bool(writer) and writer == partition
+                result = yield from self._quorum_log_once(
+                    self._region_of(writer), None, owner, key, state, writer)
+            else:
+                result = yield from self._via_leader(
+                    writer, lambda li, lr: self._quorum_log_once(
+                        lr, li, li == 0, key, state, writer))
+            return result
+
+        return self.sim.process(gen())
+
+    def _log_event(self, partition: str, txn: str, state: Vote, writer: str,
+                   mean_ms: float):
+        self.requests += 1
+        key = (partition, txn)
+
+        def gen():
+            if self.mode == "coloc":
+                result = yield from self._quorum_write(
+                    self._region_of(writer), None, key, state, writer,
+                    mean_ms)
+            else:
+                result = yield from self._via_leader(
+                    writer, lambda li, lr: self._quorum_write(
+                        lr, li, key, state, writer, mean_ms))
+            return result
+
+        return self.sim.process(gen())
+
+    def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
+        return self._log_event(partition, txn, state, writer,
+                               self.model.plain_write_ms)
+
+    def log_batch(self, partition: str, txn: str, state: Vote,
+                  n_records: int, writer: str = ""):
+        mean = self.model.plain_write_ms * (
+            1.0 + self.model.batch_size_factor * max(0, n_records - 1))
+        return self._log_event(partition, txn, state, writer, mean)
+
+    def read_state(self, partition: str, txn: str, writer: str = ""):
+        self.requests += 1
+        key = (partition, txn)
+
+        def gen():
+            if self.mode == "coloc":
+                result = yield from self._quorum_read(
+                    self._region_of(writer), None, key)
+            else:
+                result = yield from self._via_leader(
+                    writer, lambda li, lr: self._quorum_read(lr, li, key))
+            return result
+
+        return self.sim.process(gen())
+
+    def snapshot(self) -> Dict[Tuple[str, str], Vote]:
+        """Merged view over every replica's disk (ground truth for tests)."""
+        keys = set()
+        for r in self.replicas:
+            keys.update(r.keys())
+        out = {}
+        for k in keys:
+            v, _, _ = merge_reads([r.read(k) for r in self.replicas])
+            if v is not None:
+                out[k] = v
+        return out

@@ -133,3 +133,54 @@ def rtt_table() -> Dict[str, Dict]:
 def predicted_caller_latency_ms(protocol: str, paxos_rtt_ms: float) -> float:
     """Caller latency predicted by Table 3 given one inter-replica RTT."""
     return rtt_table()[protocol]["total"] * paxos_rtt_ms
+
+
+# Table-3 rows the replicated simulator can actually run, and the storage
+# deployment mode each corresponds to.
+SIMULATED_RTT_ROWS = {
+    "2pc": ("2pc", "leader"),
+    "cornus": ("cornus", "leader"),
+    "2pc-coloc": ("2pc", "coloc"),
+    "cornus-coloc": ("cornus", "coloc"),
+}
+
+
+def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
+                               n_participants: int = 2,
+                               n_replicas: int = 3,
+                               seed: int = 0) -> float:
+    """Measured counterpart of ``predicted_caller_latency_ms``.
+
+    Runs ONE commit on the discrete-event sim against a quorum-replicated
+    store under a uniform topology where every link (compute↔compute,
+    compute↔storage, inter-replica) costs ``paxos_rtt_ms`` and service times
+    are negligible — so the result should land on Table 3's RTT multiples.
+    """
+    from .sim import Sim
+    from .storage import LatencyModel, RegionTopology, ReplicatedSimStorage
+
+    if protocol not in SIMULATED_RTT_ROWS:
+        raise ValueError(f"no simulated deployment for {protocol!r}; "
+                         f"one of {sorted(SIMULATED_RTT_ROWS)}")
+    base, mode = SIMULATED_RTT_ROWS[protocol]
+    topo = RegionTopology.uniform("table3", ("r0",), paxos_rtt_ms)
+    model = LatencyModel("paxos-null", conditional_write_ms=1e-3,
+                         plain_write_ms=1e-3, read_ms=1e-3, jitter=0.0)
+    sim = Sim()
+    storage = ReplicatedSimStorage(sim, model, n_replicas=n_replicas,
+                                   seed=seed, topology=topo, mode=mode)
+    nodes = ["c"] + [f"p{i}" for i in range(n_participants)]
+    tmo = 50.0 * paxos_rtt_ms
+    cfg = ProtocolConfig(protocol=base, topology=topo,
+                         vote_timeout_ms=tmo, decision_timeout_ms=tmo,
+                         votereq_timeout_ms=tmo, termination_retry_ms=tmo,
+                         coop_retry_ms=tmo)
+    cl = Cluster(sim, storage, nodes, cfg)
+    # Pure coordinator (owns no partition) — Table 3's accounting.
+    spec = TxnSpec(txn_id="t3", coordinator="c",
+                   participants=[n for n in nodes if n != "c"])
+    cl.run_txn(spec)
+    sim.run(until=1000.0 * paxos_rtt_ms)
+    out = cl.outcomes[("t3", "c")]
+    assert out.decision == Decision.COMMIT, out
+    return out.caller_latency_ms

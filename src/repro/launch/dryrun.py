@@ -39,6 +39,15 @@ from .mesh import make_production_mesh
 from .sharding import Rules, make_rules
 from . import steps as S
 
+
+def cost_dict(compiled) -> Dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions: older
+    releases return a one-element list of dicts, newer ones the dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -170,7 +179,7 @@ def run_cell(arch: str, shape: ShapeConfig, multi_pod: bool,
         compiled = lowered.compile()
         t2 = time.time()
 
-        ca = compiled.cost_analysis() or {}
+        ca = cost_dict(compiled)
         ma = compiled.memory_analysis()
         coll = parse_collectives(compiled.as_text())
 
@@ -183,7 +192,7 @@ def run_cell(arch: str, shape: ShapeConfig, multi_pod: bool,
         if body is not None:
             body_fn, body_args = body
             bc = jax.jit(body_fn).lower(*body_args).compile()
-            body_ca = bc.cost_analysis() or {}
+            body_ca = cost_dict(bc)
             body_coll = parse_collectives(bc.as_text())
             trips = cfg.n_periods - 1
 

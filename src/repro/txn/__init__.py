@@ -5,8 +5,10 @@ transaction executor running on the discrete-event sim, and the paper's two
 workloads (YCSB with zipfian skew, TPC-C NewOrder/Payment).
 """
 from .store import LockTable, LockMode
-from .workload import TPCCWorkload, YCSBWorkload, zipf_sampler
+from .workload import (GeoYCSBWorkload, TPCCWorkload, YCSBWorkload,
+                       zipf_sampler)
 from .executor import BenchConfig, BenchResult, run_bench
 
 __all__ = ["LockTable", "LockMode", "YCSBWorkload", "TPCCWorkload",
+           "GeoYCSBWorkload",
            "zipf_sampler", "BenchConfig", "BenchResult", "run_bench"]

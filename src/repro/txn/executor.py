@@ -16,7 +16,8 @@ from typing import Dict, List, Optional
 from ..core.protocol import Cluster, ProtocolConfig
 from ..core.sim import Sim
 from ..core.state import Decision, TxnSpec, Vote
-from ..core.storage import COMPUTE_RTT_MS, LatencyModel, SimStorage
+from ..core.storage import (COMPUTE_RTT_MS, LatencyModel, RegionTopology,
+                            ReplicatedSimStorage, SimStorage)
 from ..core.variants import CoordinatorLogCluster
 from .store import LockMode, LockTable
 from .workload import Txn
@@ -34,6 +35,17 @@ class BenchConfig:
     max_attempts: int = 25
     elr: bool = False
     seed: int = 0
+    # --- replicated / geo-distributed storage (extended §6) ---------------
+    replication: int = 1              # R=1 keeps the single SimStorage
+    topology: Optional[RegionTopology] = None
+    placement: Optional[Dict[str, str]] = None   # node -> region
+    replica_regions: Optional[List[str]] = None  # per-replica region
+    storage_mode: str = "leader"      # leader | coloc
+    # (replica_idx, fail_at_ms[, recover_at_ms]) outage schedule
+    replica_failures: tuple = ()
+    # Restrict closed-loop clients to these nodes (geo: home-region
+    # coordinators only); None = clients on every node.
+    coordinator_nodes: Optional[List[str]] = None
 
 
 @dataclass
@@ -80,17 +92,31 @@ def run_bench(workload_factory, model: LatencyModel,
               cfg: BenchConfig) -> BenchResult:
     """Run one trial; `workload_factory(nodes, seed)` builds the generator."""
     sim = Sim()
-    storage = SimStorage(sim, model, seed=cfg.seed)
     nodes = [f"n{i}" for i in range(cfg.n_nodes)]
+    placement = dict(cfg.placement) if cfg.placement else (
+        cfg.topology.place_round_robin(nodes) if cfg.topology else {})
+    if cfg.replication > 1 or cfg.topology is not None:
+        storage = ReplicatedSimStorage(
+            sim, model, n_replicas=cfg.replication, seed=cfg.seed,
+            topology=cfg.topology, replica_regions=cfg.replica_regions,
+            placement=placement, mode=cfg.storage_mode)
+        for outage in cfg.replica_failures:
+            storage.fail_replica(*outage)
+    else:
+        storage = SimStorage(sim, model, seed=cfg.seed)
     # Timeouts must sit above the storage service's tail latency, or healthy
     # transactions get spuriously terminated (the paper's deployments tune
-    # timeouts per service; we scale with the model's write latency).
-    tmo = max(25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms)
+    # timeouts per service; we scale with the model's write latency, and in
+    # geo deployments with the worst link RTT times the quorum round count).
+    topo_rtt = cfg.topology.max_rtt_ms if cfg.topology else 0.0
+    tmo = max(25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
+              + 8.0 * topo_rtt)
     pcfg = ProtocolConfig(protocol="2pc" if cfg.protocol == "cl" else cfg.protocol,
                           rtt_ms=cfg.rtt_ms, elr=cfg.elr,
                           vote_timeout_ms=tmo, decision_timeout_ms=tmo,
                           votereq_timeout_ms=tmo, termination_retry_ms=tmo,
-                          coop_retry_ms=tmo)
+                          coop_retry_ms=tmo,
+                          topology=cfg.topology, placement=placement)
     cluster_cls = CoordinatorLogCluster if cfg.protocol == "cl" else Cluster
     cluster = cluster_cls(sim, storage, nodes, pcfg)
     locks = {n: LockTable(n) for n in nodes}
@@ -120,7 +146,8 @@ def run_bench(workload_factory, model: LatencyModel,
                 for (pnode, key, is_write) in txn.accesses:
                     mode = LockMode.EXCLUSIVE if is_write else LockMode.SHARED
                     if pnode != node:
-                        yield sim.timeout(cfg.rtt_ms)       # RPC to owner
+                        # RPC to the owning partition (geo-aware RTT).
+                        yield sim.timeout(pcfg.link_rtt_ms(node, pnode))
                     yield sim.timeout(cfg.access_cpu_ms)
                     if pnode not in touched:
                         touched.append(pnode)
@@ -143,11 +170,18 @@ def run_bench(workload_factory, model: LatencyModel,
                     read_only=txn.read_only_parts,
                     read_only_known_upfront=True)
                 if not txn.is_distributed:
-                    # Single-partition fast path: one forced commit record.
-                    if node not in txn.read_only_parts:
-                        yield storage.log(node, txn.txn_id, Vote.COMMIT,
-                                          writer=node)
-                    release(node, txn.txn_id)
+                    # Single-partition fast path: one forced commit record,
+                    # written by the owning partition (which may be a node
+                    # other than the coordinator, e.g. a TPC-C home
+                    # warehouse or any geo participant — then the commit
+                    # request/ack round trip to the owner is on the path).
+                    owner = txn.participants[0]
+                    if owner != node:
+                        yield sim.timeout(pcfg.link_rtt_ms(node, owner))
+                    if owner not in txn.read_only_parts:
+                        yield storage.log(owner, txn.txn_id, Vote.COMMIT,
+                                          writer=owner)
+                    release(owner, txn.txn_id)
                     committed = True
                 else:
                     done = cluster.run_txn(spec)
@@ -171,7 +205,8 @@ def run_bench(workload_factory, model: LatencyModel,
             if not committed:
                 res.gaveups += 1
 
-    for n in nodes:
+    client_nodes = cfg.coordinator_nodes if cfg.coordinator_nodes else nodes
+    for n in client_nodes:
         for c in range(cfg.threads_per_node):
             sim.process(client(n, c))
     sim.run(until=cfg.horizon_ms + 500.0)

@@ -15,6 +15,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import (decode_step, forward, init_cache, init_model,
                           prefill, smoke)
 
+# Full-family forward/train/decode sweeps take minutes on CPU.
+pytestmark = pytest.mark.slow
+
 
 def make_batch(cfg, B=2, S=32, rng_seed=0):
     rng = np.random.RandomState(rng_seed)

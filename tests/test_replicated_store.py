@@ -1,0 +1,317 @@
+"""Replicated-storage quorum LogOnce (extended paper §6).
+
+The store must behave like a single CAS register: under concurrent writers,
+minority replica failures, and any interleaving of replica fail/recover
+schedules, every caller of log_once observes the SAME first value (Paxos
+Commit's "first value accepted by a majority wins").
+"""
+import threading
+
+import pytest
+
+from repro.core import (AZURE_REDIS, CROSS_REGION, CROSS_ZONE, INTRA_ZONE,
+                        Cluster, Decision, ProtocolConfig, QuorumUnavailable,
+                        RegionTopology, ReplicatedSimStorage, ReplicatedStore,
+                        Sim, TxnSpec, Vote, measured_caller_latency_ms,
+                        predicted_caller_latency_ms)
+from repro.txn import BenchConfig, GeoYCSBWorkload, run_bench
+
+
+# ---------------------------------------------------------------------------
+# Threaded ReplicatedStore
+# ---------------------------------------------------------------------------
+def test_log_once_decided_exactly_once_under_concurrent_writers():
+    """Owner's VOTE-YES races a terminator's ABORT; both must return the
+    same winner, and reads must agree, on every trial."""
+    for trial in range(60):
+        store = ReplicatedStore(n_replicas=3, seed=trial)
+        results = {}
+
+        def owner():
+            results["o"] = store.log_once("p1", "t", Vote.VOTE_YES,
+                                          writer="p1")
+
+        def terminator():
+            results["t"] = store.log_once("p1", "t", Vote.ABORT, writer="p2")
+
+        threads = [threading.Thread(target=owner),
+                   threading.Thread(target=terminator)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert results["o"] == results["t"], (trial, results)
+        assert store.read_state("p1", "t") == results["o"]
+
+
+def test_log_once_under_minority_replica_failure():
+    store = ReplicatedStore(n_replicas=3)
+    store.fail_replica(2)
+    assert store.log_once("p", "t1", Vote.VOTE_YES, writer="p") \
+        == Vote.VOTE_YES
+    # Second writer loses the CAS even though a replica is down.
+    assert store.log_once("p", "t1", Vote.ABORT, writer="q") == Vote.VOTE_YES
+    assert store.cas_losses == 1
+
+
+def test_recovered_replica_is_read_repaired():
+    store = ReplicatedStore(n_replicas=3)
+    store.fail_replica(2)
+    store.log_once("p", "t1", Vote.VOTE_YES, writer="p")
+    store.log("p", "t1", Vote.COMMIT, writer="p")
+    store.recover_replica(2)
+    assert store.replicas[2].read(("p", "t1"))[0] is None  # stale disk
+    assert store.read_state("p", "t1") == Vote.COMMIT
+    # The read pushed the merged record into the recovered replica.
+    assert store.replicas[2].read(("p", "t1"))[0] == Vote.COMMIT
+
+
+def test_majority_down_is_unavailable_not_wrong():
+    store = ReplicatedStore(n_replicas=3)
+    store.fail_replica(0)
+    store.fail_replica(1)
+    with pytest.raises(QuorumUnavailable):
+        store.log_once("p", "t", Vote.VOTE_YES, writer="p")
+    with pytest.raises(QuorumUnavailable):
+        store.read_state("p", "t")
+
+
+def test_log_decision_is_sticky():
+    store = ReplicatedStore(n_replicas=3)
+    store.log("p", "t", Vote.COMMIT, writer="p")
+    assert store.log("p", "t", Vote.VOTE_YES, writer="p") == Vote.COMMIT
+    assert store.read_state("p", "t") == Vote.COMMIT
+
+
+def test_many_concurrent_slots_and_writers():
+    """8 writers x 16 slots, each slot raced by two values."""
+    store = ReplicatedStore(n_replicas=5, seed=3)
+    results = [dict() for _ in range(8)]
+
+    def worker(w):
+        for s in range(16):
+            v = Vote.VOTE_YES if w % 2 == 0 else Vote.ABORT
+            results[w][s] = store.log_once("p", f"t{s}", v, writer=f"w{w}")
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for s in range(16):
+        winners = {results[w][s] for w in range(8)}
+        assert len(winners) == 1, (s, winners)
+
+
+# ---------------------------------------------------------------------------
+# RegionTopology
+# ---------------------------------------------------------------------------
+def test_region_topology_lookup_and_presets():
+    assert INTRA_ZONE.rtt_ms("zone-a", "zone-a") == INTRA_ZONE.intra_ms
+    assert CROSS_ZONE.rtt_ms("zone-a", "zone-b") == 2.0
+    # Symmetric regardless of argument order.
+    assert CROSS_REGION.rtt_ms("us-east", "eu-west") \
+        == CROSS_REGION.rtt_ms("eu-west", "us-east") == 76.0
+    assert CROSS_REGION.max_rtt_ms == 140.0
+    uni = RegionTopology.uniform("u", ("a", "b"), 7.0)
+    assert uni.rtt_ms("a", "a") == uni.rtt_ms("a", "b") == 7.0
+    pl = CROSS_REGION.place_round_robin(["n0", "n1", "n2", "n3"])
+    assert pl["n0"] == "us-east" and pl["n3"] == "us-east"
+
+
+# ---------------------------------------------------------------------------
+# Simulated quorum store: deterministic interleaving sweep
+# ---------------------------------------------------------------------------
+def _race_one(seed, mode, n_replicas, fails, delays):
+    """Three proposers race on one slot under a replica outage schedule;
+    returns the dict of returned values (must be a singleton set)."""
+    sim = Sim()
+    storage = ReplicatedSimStorage(sim, AZURE_REDIS, n_replicas=n_replicas,
+                                   seed=seed, mode=mode)
+    for idx, at, rec in fails:
+        if idx < n_replicas:
+            storage.fail_replica(idx, at, rec)
+    results = {}
+
+    def proposer(name, value, delay):
+        def gen():
+            yield sim.timeout(delay)
+            got = yield storage.log_once("p0", "t", value, writer=name)
+            results[name] = got
+        sim.process(gen())
+
+    proposer("p0", Vote.VOTE_YES, delays[0])   # slot owner
+    proposer("q1", Vote.ABORT, delays[1])      # termination peer
+    proposer("q2", Vote.ABORT, delays[2])      # second terminator
+    sim.run(until=200_000.0)
+    return results
+
+
+@pytest.mark.parametrize("mode", ["leader", "coloc"])
+def test_sim_quorum_race_single_decision_sweep(mode):
+    """Deterministic sweep over seeds, outage schedules, and proposer
+    offsets: no interleaving yields divergent decisions."""
+    schedules = [
+        (),
+        (((0, 0.0, float("inf"))),),
+        ((1, 2.0, 30.0),),
+        ((0, 0.0, 25.0), (2, 10.0, 60.0)),
+    ]
+    # normalize: first entry above is a 3-tuple, keep consistent
+    schedules[1] = ((0, 0.0, float("inf")),)
+    for seed in range(10):
+        for fails in schedules:
+            res = _race_one(seed, mode, 3, fails,
+                            delays=(0.0, seed % 5, (seed * 3) % 7))
+            assert len(res) == 3, (seed, fails, res)
+            assert len(set(res.values())) == 1, (seed, fails, res)
+
+
+def test_sim_recovered_replica_catches_up():
+    sim = Sim()
+    storage = ReplicatedSimStorage(sim, AZURE_REDIS, n_replicas=3, seed=1)
+    storage.fail_replica(2, at=0.0, recover_at=500.0)
+    done = {}
+
+    def gen():
+        got = yield storage.log_once("p", "t", Vote.VOTE_YES, writer="p")
+        done["v"] = got
+    sim.process(gen())
+    sim.run(until=400.0)
+    assert done["v"] == Vote.VOTE_YES
+    assert storage.replicas[2].read(("p", "t"))[0] is None
+    sim.run(until=1000.0)
+
+    def rd():
+        done["r"] = yield storage.read_state("p", "t")
+    sim.process(rd())
+    sim.run(until=2000.0)
+    assert done["r"] == Vote.VOTE_YES
+    sim.run(until=3000.0)   # let the async repair push land
+    assert storage.replicas[2].read(("p", "t"))[0] == Vote.VOTE_YES
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: no interleaving of replica failures yields divergent decisions
+# (skipped, but still collected, when hypothesis is not installed)
+# ---------------------------------------------------------------------------
+from conftest import hypothesis_or_stubs  # noqa: E402
+
+HAS_HYPOTHESIS, given, settings, st = hypothesis_or_stubs()
+
+outage = st.tuples(st.integers(0, 4), st.floats(0.0, 50.0),
+                   st.floats(50.0, 500.0))
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["leader", "coloc"]),
+       n_replicas=st.sampled_from([3, 5]),
+       fails=st.lists(outage, max_size=3),
+       delays=st.tuples(st.floats(0.0, 20.0), st.floats(0.0, 20.0),
+                        st.floats(0.0, 20.0)))
+def test_no_failure_interleaving_diverges(seed, mode, n_replicas, fails,
+                                          delays):
+    """Every proposer sees the same decided value, and the merged on-disk
+    state agrees with it, under randomized outage schedules (all outages
+    recover, so quorum is eventually available)."""
+    sim = Sim()
+    storage = ReplicatedSimStorage(sim, AZURE_REDIS, n_replicas=n_replicas,
+                                   seed=seed, mode=mode)
+    for idx, at, rec in fails:
+        if idx < n_replicas:
+            storage.fail_replica(idx, at, rec)
+    results = {}
+
+    def proposer(name, value, delay):
+        def gen():
+            yield sim.timeout(delay)
+            got = yield storage.log_once("p0", "t", value, writer=name)
+            results[name] = got
+        sim.process(gen())
+
+    proposer("p0", Vote.VOTE_YES, delays[0])
+    proposer("q1", Vote.ABORT, delays[1])
+    proposer("q2", Vote.ABORT, delays[2])
+    sim.run(until=500_000.0)
+    assert len(results) == 3, results
+    assert len(set(results.values())) == 1, results
+    decided = next(iter(results.values()))
+    assert storage.snapshot().get(("p0", "t")) == decided
+
+
+# ---------------------------------------------------------------------------
+# Protocol integration over the replicated store
+# ---------------------------------------------------------------------------
+def _geo_run(proto, fail=()):
+    placement = {"n0": "us-east", "n1": "us-west", "n2": "eu-west",
+                 "n3": "us-west"}
+
+    def wl(nodes, seed):
+        return GeoYCSBWorkload(nodes, placement, "us-east",
+                               accesses_per_txn=4, seed=seed)
+
+    cfg = BenchConfig(protocol=proto, n_nodes=4, horizon_ms=1500.0,
+                      replication=3, topology=CROSS_REGION,
+                      placement=placement,
+                      replica_regions=["us-east", "us-west", "eu-west"],
+                      replica_failures=fail, coordinator_nodes=["n0"],
+                      seed=7)
+    return run_bench(wl, AZURE_REDIS, cfg)
+
+
+def test_geo_ycsb_r3_with_replica_failure_cornus_beats_2pc():
+    """Acceptance: Cornus and 2PC both complete geo-YCSB against the R=3
+    quorum store with the coordinator-region replica down, and Cornus's
+    caller latency stays ahead (no decision-log quorum round)."""
+    res = {p: _geo_run(p, fail=((0, 0.0),)) for p in ("cornus", "2pc")}
+    for p, r in res.items():
+        assert r.commits > 0 and r.gaveups == 0, (p, r.commits, r.gaveups)
+    assert res["cornus"].avg_latency_ms < res["2pc"].avg_latency_ms, \
+        {p: r.avg_latency_ms for p, r in res.items()}
+
+
+def test_cornus_termination_bounded_over_replicated_store():
+    """Coordinator dies before sending the decision: every surviving
+    participant resolves through the quorum-CAS termination protocol in
+    bounded time, they all agree, and the merged replica state matches —
+    Cornus stays non-blocking on replicated storage."""
+    sim = Sim()
+    topo = CROSS_ZONE
+    nodes = [f"n{i}" for i in range(4)]
+    placement = topo.place_round_robin(nodes)
+    storage = ReplicatedSimStorage(sim, AZURE_REDIS, n_replicas=3, seed=3,
+                                   topology=topo, placement=placement,
+                                   mode="leader")
+    cfg = ProtocolConfig(protocol="cornus", topology=topo,
+                         placement=placement,
+                         vote_timeout_ms=60.0, decision_timeout_ms=60.0,
+                         votereq_timeout_ms=60.0, termination_retry_ms=60.0)
+    cl = Cluster(sim, storage, nodes, cfg)
+    cl.fail("n0", 1.0)
+    cl.run_txn(TxnSpec(txn_id="t", coordinator="n0", participants=nodes))
+    sim.run(until=60_000.0)
+    survivors = [o for (t, n), o in cl.outcomes.items() if n != "n0"]
+    assert len(survivors) == 3, "a participant blocked"
+    decisions = {o.decision for o in survivors}
+    assert len(decisions) == 1 and Decision.UNDETERMINED not in decisions
+    for o in survivors:
+        assert o.ran_termination
+        assert o.termination_ms < 1_000.0   # bounded, no blocking
+    # Merged replica state carries the same outcome for every partition
+    # that logged a decision record.
+    snap = storage.snapshot()
+    decided = next(iter(decisions))
+    want = Vote.COMMIT if decided == Decision.COMMIT else Vote.ABORT
+    logged = [v for (p, t), v in snap.items() if v.is_decision()]
+    assert logged and all(v == want for v in logged), snap
+
+
+def test_table3_measured_matches_predicted():
+    """The replicated simulator reproduces the analytic Table-3 RTT counts
+    for every deployment it implements (±5%)."""
+    for proto in ("cornus", "2pc", "cornus-coloc", "2pc-coloc"):
+        measured = measured_caller_latency_ms(proto, 20.0)
+        predicted = predicted_caller_latency_ms(proto, 20.0)
+        assert abs(measured - predicted) / predicted < 0.05, \
+            (proto, measured, predicted)

@@ -70,12 +70,13 @@ def test_dryrun_lowering_path_smoke():
     config — the 512-device run just changes the mesh."""
     from repro.configs import get_config
     from repro.launch import steps as S
-    from repro.launch.dryrun import parse_collectives
+    from repro.launch.dryrun import cost_dict, parse_collectives
+    from repro.launch.mesh import auto_axis_types_kwargs
     from repro.launch.sharding import Rules
     from repro.models.config import ShapeConfig, smoke
 
     mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **auto_axis_types_kwargs(2))
     rules = Rules(mesh)
     cfg = smoke(get_config("llama3.2-1b"))
     shape = ShapeConfig("tiny_train", seq_len=32, global_batch=2,
@@ -86,7 +87,7 @@ def test_dryrun_lowering_path_smoke():
     with mesh:
         compiled = jax.jit(fn).lower(specs["params"], specs["opt_state"],
                                      specs["batch"], specs["step"]).compile()
-    ca = compiled.cost_analysis()
+    ca = cost_dict(compiled)
     assert ca["flops"] > 1e6
     coll = parse_collectives(compiled.as_text())
     assert set(coll) == {"all-reduce", "all-gather", "reduce-scatter",

@@ -13,6 +13,9 @@ from repro.core.storage import FileStore
 from repro.launch.train import (MidCheckpointCrash, RunConfig, RunResult,
                                 train, _hosts)
 
+# Real multi-step training runs — minutes of CPU per test.
+pytestmark = pytest.mark.slow
+
 
 def base_run(tmp, **kw):
     d = dict(arch="llama3.2-1b", steps=24, batch=4, seq_len=64,

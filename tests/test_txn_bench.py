@@ -2,11 +2,14 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stubs
 
 from repro.core.storage import AZURE_BLOB, AZURE_REDIS
 from repro.txn import (BenchConfig, LockMode, LockTable, TPCCWorkload,
                        YCSBWorkload, run_bench, zipf_sampler)
+
+HAS_HYPOTHESIS, given, settings, st = hypothesis_or_stubs()
 
 
 def test_nowait_lock_semantics():
