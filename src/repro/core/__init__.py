@@ -3,8 +3,11 @@
 Public surface:
   state      – Vote / Decision / TxnSpec / global_decision (Def. 1)
   storage    – MemoryStore / FileStore / SimStorage + latency models
-  protocol   – Cluster (Cornus + 2PC, termination protocols, recovery)
-  variants   – CoordinatorLogCluster, Table-3 RTT model
+  protocols  – pluggable commit-protocol API: Transport + TxnContext +
+               CommitProtocol strategies, register()/get_protocol() registry
+               (cornus, 2pc, cl, cornus-opt1, paxos-commit)
+  protocol   – Cluster facade wiring the three together (back-compat)
+  variants   – Table-3 RTT model + runnable deployments per row
   sim        – deterministic discrete-event kernel
 """
 from .sim import Sim
@@ -15,8 +18,11 @@ from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       QuorumUnavailable, RegionTopology, ReplicaLog,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage,
                       merge_reads)
+from .protocols import (CommitProtocol, Transport, TxnContext, get_protocol,
+                        register, registered_protocols)
 from .protocol import Cluster, ProtocolConfig
-from .variants import (CoordinatorLogCluster, measured_caller_latency_ms,
+from .variants import (SIMULATED_RTT_ROWS, CoordinatorLogCluster,
+                       measured_caller_latency_ms,
                        predicted_caller_latency_ms, rtt_table)
 
 __all__ = [
@@ -24,7 +30,10 @@ __all__ = [
     "MemoryStore", "FileStore", "SimStorage", "LatencyModel",
     "AZURE_REDIS", "AZURE_BLOB", "AZURE_BLOB_SEPARATE_ACL", "SLOW_REDIS",
     "COMPUTE_RTT_MS", "Cluster", "ProtocolConfig", "CoordinatorLogCluster",
+    "CommitProtocol", "Transport", "TxnContext",
+    "register", "get_protocol", "registered_protocols",
     "rtt_table", "predicted_caller_latency_ms", "measured_caller_latency_ms",
+    "SIMULATED_RTT_ROWS",
     "RegionTopology", "INTRA_ZONE", "CROSS_ZONE", "CROSS_REGION",
     "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
     "QuorumUnavailable",

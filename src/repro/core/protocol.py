@@ -1,57 +1,34 @@
-"""Cornus and conventional 2PC, faithful to the paper's Algorithm 1.
+"""Cluster: thin facade over the pluggable commit-protocol API.
 
-Both protocols run as processes on the discrete-event kernel (`core.sim`)
-against a `SimStorage` (CAS-at-apply-time semantics).  Grey-highlighted lines
-of Algorithm 1 are marked ``# [Alg1 L<n>]`` so the implementation can be
-audited against the paper.
+Historically this module WAS the protocol implementation — a 525-line class
+fusing messaging, liveness, timeouts and the Cornus/2PC logic.  That now
+lives in ``repro.core.protocols`` as three separable pieces:
 
-Key behavioural differences implemented:
-  * Cornus coordinator never logs a decision; it replies to the caller the
-    moment the collective vote is known           (latency win, Fig 5–7).
-  * Cornus timeout paths go to the storage-based termination protocol that
-    CAS-forces ABORT into unresponsive participants' logs (non-blocking,
-    Fig 8); 2PC uses the cooperative termination protocol and *blocks* when
-    the coordinator is down and no peer knows the decision.
-  * Presumed abort: ABORT logging is async and off the critical path.
-  * Read-only optimizations per §3.6 / §5.1.4.
+  * ``Transport``      – send/wait/liveness/slots between compute nodes
+  * ``TxnContext``     – per-txn bookkeeping, outcomes, executor hooks
+  * ``CommitProtocol`` – the strategy interface (coordinator_round /
+    participant_round / terminate / recover), selected by name from the
+    protocol registry (``register`` / ``get_protocol``)
+
+``Cluster`` wires the three together and keeps the original surface, so
+existing call sites — tests, benchmarks, examples — work unchanged:
+
+    cluster = Cluster(sim, storage, nodes, ProtocolConfig(protocol="cornus"))
+    done = cluster.run_txn(spec)        # ... cluster.outcomes, .local, ...
+
+New variants plug in without touching this file; see
+``repro/core/protocols/cornus_opt1.py`` for a complete ~25-line example.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from .sim import Sim
-from .state import Decision, TxnOutcome, TxnSpec, Vote
-from .storage import COMPUTE_RTT_MS, RegionTopology, SimStorage
+from .state import TxnSpec
+from .protocols import (CommitProtocol, ProtocolConfig, Transport, TxnContext,
+                        get_protocol)
 
-
-@dataclass
-class ProtocolConfig:
-    protocol: str = "cornus"            # "cornus" | "2pc"
-    rtt_ms: float = COMPUTE_RTT_MS      # compute <-> compute round trip
-    vote_timeout_ms: float = 25.0       # coordinator waiting for votes
-    decision_timeout_ms: float = 25.0   # participant waiting for decision
-    votereq_timeout_ms: float = 25.0    # participant waiting for VOTE-REQ
-    termination_retry_ms: float = 25.0  # retry period for termination protocol
-    # 2PC cooperative termination polls peers with this period while blocked.
-    coop_retry_ms: float = 25.0
-    # Early Lock Release / speculative precommit (§5.6): locks drop at
-    # precommit instead of at decision. Consumed by the txn executor via the
-    # on_precommit hook.
-    elr: bool = False
-    # Geo-distributed deployments (extended §6): per-link RTTs come from a
-    # RegionTopology + node→region placement instead of the scalar rtt_ms.
-    topology: Optional[RegionTopology] = None
-    placement: Dict[str, str] = field(default_factory=dict)
-
-    def link_rtt_ms(self, src: str, dst: str) -> float:
-        """Round trip between two compute nodes under the active model."""
-        if self.topology is None:
-            return self.rtt_ms
-        default = self.topology.regions[0]
-        return self.topology.rtt_ms(self.placement.get(src, default),
-                                    self.placement.get(dst, default))
+__all__ = ["Cluster", "ProtocolConfig"]
 
 
 class Cluster:
@@ -59,89 +36,74 @@ class Cluster:
 
     Each node owns one data partition named after itself (paper §5.1.1:
     "each compute node runs a resource manager and has exclusive access to
-    one partition").
+    one partition").  The commit protocol is resolved from the registry by
+    ``cfg.protocol`` (or the explicit ``protocol=`` override).
     """
 
-    def __init__(self, sim: Sim, storage: SimStorage, nodes: List[str],
-                 cfg: ProtocolConfig):
+    def __init__(self, sim: Sim, storage, nodes: List[str],
+                 cfg: ProtocolConfig, protocol: Optional[str] = None):
         self.sim = sim
         self.storage = storage
         self.nodes = list(nodes)
         self.cfg = cfg
-        self.fail_at: Dict[str, float] = {n: float("inf") for n in nodes}
-        self.recover_at: Dict[str, float] = {n: float("inf") for n in nodes}
-        self._slots: Dict[Tuple[str, str, str], "object"] = {}
-        # (node, txn) -> {"status": none|voted|decided, "decision": Decision}
-        self.local: Dict[Tuple[str, str], Dict] = {}
-        self.outcomes: Dict[Tuple[str, str], TxnOutcome] = {}
-        # Hooks for the transaction executor (lock release timing, ELR).
-        self.on_precommit: Optional[Callable[[str, str, float], None]] = None
-        self.on_finish: Optional[Callable[[str, str, Decision, float], None]] = None
-        self.blocked: Dict[Tuple[str, str], bool] = {}
+        self.transport = Transport(sim, self.nodes, cfg)
+        self.ctx = TxnContext(sim)
+        cls = get_protocol(protocol or cfg.protocol)
+        self.protocol: CommitProtocol = cls(self.transport, storage,
+                                            self.ctx, cfg)
 
-    # -- liveness -----------------------------------------------------------
+    # -- liveness (delegated to the transport) ------------------------------
+    @property
+    def fail_at(self) -> Dict[str, float]:
+        return self.transport.fail_at
+
+    @property
+    def recover_at(self) -> Dict[str, float]:
+        return self.transport.recover_at
+
     def alive(self, node: str) -> bool:
-        t = self.sim.now
-        return t < self.fail_at[node] or t >= self.recover_at[node]
+        return self.transport.alive(node)
 
     def fail(self, node: str, at: float, recover_at: float = float("inf")):
-        self.fail_at[node] = at
-        self.recover_at[node] = recover_at
+        self.transport.fail(node, at, recover_at)
 
     # -- messaging ----------------------------------------------------------
-    def _slot(self, dst: str, txn: str, kind: str):
-        key = (dst, txn, kind)
-        ev = self._slots.get(key)
-        if ev is None:
-            ev = self.sim.event()
-            self._slots[key] = ev
-        return ev
-
     def send(self, src: str, dst: str, txn: str, kind: str, value=None):
-        """One-way message; delivered after rtt/2 if both ends are alive."""
-        if not self.alive(src):
-            return
-        delay = 0.0 if src == dst else self.cfg.link_rtt_ms(src, dst) / 2.0
-        slot = self._slot(dst, txn, kind)
-
-        def deliver():
-            if self.alive(dst):
-                slot.trigger(value)
-
-        self.sim._schedule(self.sim.now + delay, deliver)
+        self.transport.send(src, dst, txn, kind, value)
 
     def wait(self, dst: str, txn: str, kind: str, timeout_ms: float):
-        """Event yielding ('msg', value) or ('timeout', None)."""
-        slot = self._slot(dst, txn, kind)
-        to = self.sim.timeout(timeout_ms)
-        any_ev = self.sim.any_of([slot, to])
-        done = self.sim.event()
+        return self.transport.wait(dst, txn, kind, timeout_ms)
 
-        def on(ev):
-            idx, val = ev.value
-            done.trigger(("msg", val) if idx == 0 else ("timeout", None))
+    # -- per-txn bookkeeping (delegated to the context) ---------------------
+    @property
+    def local(self) -> Dict[Tuple[str, str], Dict]:
+        return self.ctx.local
 
-        any_ev.subscribe(on)
-        return done
+    @property
+    def outcomes(self) -> Dict[Tuple[str, str], "object"]:
+        return self.ctx.outcomes
 
-    # -- local bookkeeping ---------------------------------------------------
-    def _local(self, node: str, txn: str) -> Dict:
-        return self.local.setdefault((node, txn), {"status": "none",
-                                                   "decision": None})
+    @property
+    def blocked(self) -> Dict[Tuple[str, str], bool]:
+        return self.ctx.blocked
 
-    def _decide(self, node: str, txn: str, decision: Decision):
-        st = self._local(node, txn)
-        if st["decision"] is None:
-            st["status"], st["decision"] = "decided", decision
-            if self.on_finish:
-                self.on_finish(node, txn, decision, self.sim.now)
+    @property
+    def on_precommit(self):
+        return self.ctx.on_precommit
 
-    def _record(self, out: TxnOutcome):
-        self.outcomes[(out.txn_id, out.node)] = out
+    @on_precommit.setter
+    def on_precommit(self, fn) -> None:
+        self.ctx.on_precommit = fn
 
-    # ========================================================================
-    # Transaction entry point
-    # ========================================================================
+    @property
+    def on_finish(self):
+        return self.ctx.on_finish
+
+    @on_finish.setter
+    def on_finish(self, fn) -> None:
+        self.ctx.on_finish = fn
+
+    # -- protocol entry points ----------------------------------------------
     def run_txn(self, spec: TxnSpec):
         """Spawn coordinator + participant processes for one transaction.
 
@@ -149,377 +111,10 @@ class Cluster:
         """
         for p in spec.participants:
             if p != spec.coordinator:
-                self.sim.process(self._participant(spec, p))
-        return self.sim.process(self._coordinator(spec))
+                self.sim.process(self.protocol.participant_round(spec, p))
+        return self.sim.process(self.protocol.coordinator_round(spec))
 
-    # ========================================================================
-    # Coordinator
-    # ========================================================================
-    def _coordinator(self, spec: TxnSpec):
-        cfg, sim, me = self.cfg, self.sim, spec.coordinator
-        txn = spec.txn_id
-        t0 = sim.now
-        out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
-
-        # §3.6 / §5.1.4: fully read-only txn known upfront — skip both phases
-        # in BOTH protocols (locks released immediately by executor hook).
-        if spec.all_read_only and spec.read_only_known_upfront:
-            out.decision = Decision.COMMIT
-            out.caller_latency_ms = sim.now - t0
-            out.done_at_ms = sim.now
-            self._decide(me, txn, Decision.COMMIT)
-            for p in spec.participants:
-                self.send(me, p, txn, "decision", Decision.COMMIT)
-            self._record(out)
-            return out
-
-    # ---- phase 1: vote requests -------------------------------------------
-        if not self.alive(me):
-            return out
-        for p in spec.participants:                      # [Alg1 L2-3]
-            if p != me:
-                self.send(me, p, txn, "vote-req",
-                          {"participants": list(spec.participants)})
-        # The coordinator's own partition (if participating) votes locally.
-        my_vote_ev = None
-        if me in spec.participants:
-            my_vote_ev = self.sim.process(
-                self._participant_vote_local(spec, me))
-
-        # Collect votes.                                  [Alg1 L4-7]
-        pending = [p for p in spec.participants if p != me]
-        waits = [self.wait(me, txn, f"vote:{p}", cfg.vote_timeout_ms)
-                 for p in pending]
-        if my_vote_ev is not None:
-            waits.append(self._wrap_local_vote(my_vote_ev, cfg.vote_timeout_ms))
-        results = yield self.sim.all_of(waits)
-        if not self.alive(me):
-            return out
-        prepare_done = sim.now
-        out.prepare_ms = prepare_done - t0
-
-        timed_out = any(tag == "timeout" for tag, _ in results)
-        any_abort = any(tag == "msg" and val == "ABORT" for tag, val in results)
-
-        if any_abort:                                     # [Alg1 L5]
-            decision = Decision.ABORT
-        elif not timed_out:                               # [Alg1 L6]
-            decision = Decision.COMMIT
-        else:                                             # [Alg1 L7]
-            if cfg.protocol == "cornus":
-                decision = yield from self._termination(spec, me, out)
-            else:
-                # Conventional 2PC: unilateral abort on vote timeout.
-                decision = Decision.ABORT
-        if not self.alive(me):
-            return out
-
-        # ---- decision point -------------------------------------------------
-        if cfg.protocol == "2pc":
-            if decision == Decision.COMMIT:
-                # 2PC: the commit record IS the ground truth — it must be
-                # durable before replying to the caller (eager decision log).
-                yield self.storage.log(me, txn, Vote.COMMIT, writer=me)
-            else:
-                # Presumed abort: the abort record need not be forced.
-                self.storage.log(me, txn, Vote.ABORT, writer=me)
-            if not self.alive(me):
-                return out
-        # Cornus: no decision log — reply immediately.     [Alg1 L8]
-        out.decision = decision
-        out.caller_latency_ms = sim.now - t0
-        out.commit_ms = sim.now - prepare_done
-        self._decide(me, txn, decision)
-
-        for p in spec.participants:                       # [Alg1 L9-10]
-            if p != me:
-                self.send(me, p, txn, "decision", decision)
-        if me in spec.participants and cfg.protocol == "cornus":
-            # Coordinator-as-participant logs the decision asynchronously.
-            self.storage.log(me, txn,
-                             Vote.COMMIT if decision == Decision.COMMIT
-                             else Vote.ABORT, writer=me)
-        out.done_at_ms = sim.now
-        self._record(out)
-        return out
-
-    def _wrap_local_vote(self, proc, timeout_ms: float):
-        """Adapt a local-vote process result to the ('msg', vote) shape."""
-        to = self.sim.timeout(timeout_ms)
-        any_ev = self.sim.any_of([proc, to])
-        done = self.sim.event()
-
-        def on(ev):
-            idx, val = ev.value
-            done.trigger(("msg", val) if idx == 0 else ("timeout", None))
-
-        any_ev.subscribe(on)
-        return done
-
-    def _participant_vote_local(self, spec: TxnSpec, me: str):
-        """Coordinator's own partition voting (no network hop)."""
-        txn = spec.txn_id
-        st = self._local(me, txn)
-        if me in spec.read_only and spec.read_only_known_upfront:
-            st["status"] = "voted"
-            return "VOTE-YES"
-        if not spec.vote_of(me):
-            self.storage.log(me, txn, Vote.ABORT, writer=me)  # async
-            self._decide(me, txn, Decision.ABORT)
-            return "ABORT"
-        if self.cfg.protocol == "cornus":
-            resp = yield self.storage.log_once(me, txn, Vote.VOTE_YES, writer=me)
-            if resp == Vote.ABORT:
-                self._decide(me, txn, Decision.ABORT)
-                return "ABORT"
-        else:
-            yield self.storage.log(me, txn, Vote.VOTE_YES, writer=me)
-        st["status"] = "voted"
-        if self.on_precommit and self.cfg.elr:
-            self.on_precommit(me, txn, self.sim.now)
-        return "VOTE-YES"
-
-    # ========================================================================
-    # Participant                                          [Alg1 L11-25]
-    # ========================================================================
-    def _participant(self, spec: TxnSpec, me: str):
-        cfg, sim = self.cfg, self.sim
-        txn = spec.txn_id
-        if me == spec.coordinator:
-            return  # voted via _participant_vote_local
-        t0 = sim.now
-        out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
-        st = self._local(me, txn)
-
-        if spec.all_read_only and spec.read_only_known_upfront:
-            tag, val = yield self.wait(me, txn, "decision", cfg.votereq_timeout_ms)
-            self._decide(me, txn, Decision.COMMIT)
-            out.decision = Decision.COMMIT
-            out.done_at_ms = sim.now
-            self._record(out)
-            return out
-
-        tag, msg = yield self.wait(me, txn, "vote-req",    # [Alg1 L12]
-                                   cfg.votereq_timeout_ms)
-        if not self.alive(me):
-            return out
-        if tag == "timeout":                               # [Alg1 L13]
-            yield self.storage.log(me, txn, Vote.ABORT, writer=me)
-            self._decide(me, txn, Decision.ABORT)
-            out.decision = Decision.ABORT
-            out.done_at_ms = sim.now
-            self._record(out)
-            return out
-
-        votes_yes = spec.vote_of(me)
-        read_only = me in spec.read_only
-
-        if votes_yes:                                      # [Alg1 L14]
-            if read_only and spec.read_only_known_upfront:
-                # Known-upfront read-only participant: skip prepare logging,
-                # release locks, reply YES (§3.6 simple case, both protocols).
-                st["status"] = "voted"
-                self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
-                self._decide(me, txn, Decision.COMMIT)
-                out.decision = Decision.COMMIT
-                out.done_at_ms = sim.now
-                self._record(out)
-                return out
-
-            if read_only and cfg.protocol == "2pc":
-                # §3.6 second case, 2PC side: a read-only participant
-                # discovered at prepare time skips logging entirely and can
-                # release locks after replying.  (Cornus must NOT take this
-                # path: a missing VOTE-YES in its log reads as abortable by
-                # the termination protocol — it falls through to LogOnce.)
-                st["status"] = "voted"
-                self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
-                tag, decision = yield self.wait(me, txn, "decision",
-                                                cfg.decision_timeout_ms)
-                d = decision if tag == "msg" else Decision.ABORT
-                self._decide(me, txn, d)
-                out.decision = d
-                out.done_at_ms = sim.now
-                self._record(out)
-                return out
-
-            if cfg.protocol == "cornus":
-                # LogOnce(VOTE-YES)                        [Alg1 L15]
-                resp = yield self.storage.log_once(me, txn, Vote.VOTE_YES,
-                                                   writer=me)
-                if not self.alive(me):
-                    return out
-                if resp == Vote.ABORT:                     # [Alg1 L16-17]
-                    # A peer already aborted on our behalf via termination.
-                    self.send(me, spec.coordinator, txn, f"vote:{me}", "ABORT")
-                    self._decide(me, txn, Decision.ABORT)
-                    out.decision = Decision.ABORT
-                    out.done_at_ms = sim.now
-                    self._record(out)
-                    return out
-            else:
-                # 2PC prepare: plain forced log write.
-                yield self.storage.log(me, txn, Vote.VOTE_YES, writer=me)
-                if not self.alive(me):
-                    return out
-
-            st["status"] = "voted"
-            out.prepare_ms = sim.now - t0
-            if self.on_precommit and cfg.elr:
-                self.on_precommit(me, txn, sim.now)
-            self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
-            # Wait for the decision.                       [Alg1 L20-21]
-            tag, decision = yield self.wait(me, txn, "decision",
-                                            cfg.decision_timeout_ms)
-            if not self.alive(me):
-                return out
-            if tag == "timeout":
-                out.ran_termination = True
-                tstart = sim.now
-                if cfg.protocol == "cornus":
-                    decision = yield from self._termination(spec, me, out)
-                else:
-                    decision = yield from self._coop_termination(spec, me, out)
-                out.termination_ms = sim.now - tstart
-            if decision is None:
-                # 2PC blocked until sim horizon.
-                out.decision = Decision.UNDETERMINED
-                self._record(out)
-                return out
-            # Log the decision locally.                    [Alg1 L22]
-            yield self.storage.log(me, txn,
-                                   Vote.COMMIT if decision == Decision.COMMIT
-                                   else Vote.ABORT, writer=me)
-            self._decide(me, txn, decision)
-            out.decision = decision
-        else:
-            # VOTE-NO: presumed abort — async log, reply.  [Alg1 L23-25]
-            self.storage.log(me, txn, Vote.ABORT, writer=me)
-            self.send(me, spec.coordinator, txn, f"vote:{me}", "ABORT")
-            self._decide(me, txn, Decision.ABORT)
-            out.decision = Decision.ABORT
-
-        out.done_at_ms = sim.now
-        self._record(out)
-        return out
-
-    # ========================================================================
-    # Cornus termination protocol                          [Alg1 L26-34]
-    # ========================================================================
-    def _termination(self, spec: TxnSpec, me: str, out: TxnOutcome):
-        cfg, sim = self.cfg, self.sim
-        txn = spec.txn_id
-        out.ran_termination = True
-        while True:
-            if not self.alive(me):
-                return None
-            targets = [p for p in spec.participants if p != me]
-            # CAS ABORT into every other participant's log. [Alg1 L27-28]
-            reqs = [self.storage.log_once(p, txn, Vote.ABORT, writer=me)
-                    for p in targets]
-            # Include own log state (me may have VOTE-YES there, or — if me
-            # is a non-participant coordinator — nothing).
-            if me in spec.participants:
-                reqs.append(self.storage.log_once(me, txn, Vote.ABORT,
-                                                  writer=me))
-            to = self.sim.timeout(cfg.termination_retry_ms)
-            got = yield self.sim.any_of([self.sim.all_of(reqs), to])
-            idx, val = got
-            if idx == 1:
-                continue                                   # [Alg1 L33] retry
-            states: List[Vote] = val
-            if any(s == Vote.ABORT for s in states):       # [Alg1 L30]
-                return Decision.ABORT
-            if any(s == Vote.COMMIT for s in states):      # [Alg1 L31]
-                return Decision.COMMIT
-            # All responses are VOTE-YES.                  [Alg1 L32]
-            return Decision.COMMIT
-
-    # ========================================================================
-    # 2PC cooperative termination (§2.1) — may block
-    # ========================================================================
-    def _coop_termination(self, spec: TxnSpec, me: str, out: TxnOutcome):
-        cfg, sim = self.cfg, self.sim
-        txn = spec.txn_id
-        attempt = 0
-        while True:
-            if not self.alive(me):
-                return None
-            attempt += 1
-            peers = [p for p in list(spec.participants) + [spec.coordinator]
-                     if p != me]
-            for p in peers:
-                self.send(me, p, txn, f"dec-req:{me}:{attempt}", me)
-                self._serve_decision_request(p, txn, me, attempt)
-            waits = [self.wait(me, txn, f"dec-resp:{p}:{attempt}",
-                               cfg.coop_retry_ms) for p in peers]
-            results = yield self.sim.all_of(waits)
-            for tag, val in results:
-                if tag == "msg" and val in (Decision.COMMIT, Decision.ABORT):
-                    return val
-            # Nobody knows: blocked. Retry (models waiting for coordinator
-            # recovery); give up only when the sim horizon ends us.
-            self.blocked[(txn, me)] = True
-            yield self.sim.timeout(cfg.coop_retry_ms)
-            if sim.now > 1e7:
-                return None
-
-    def _serve_decision_request(self, server: str, txn: str, asker: str,
-                                attempt: int):
-        """Peer-side handler for cooperative termination (runs as a server
-        thread, so it is modelled at delivery time rather than inside the
-        peer's protocol process)."""
-        delay = self.cfg.link_rtt_ms(asker, server) / 2.0
-
-        def handle():
-            if not self.alive(server):
-                return
-            st = self._local(server, txn)
-            if st["decision"] is not None:
-                resp = st["decision"]
-            elif st["status"] == "none":
-                # Never voted: unilaterally abort and answer ABORT.
-                self.storage.log(server, txn, Vote.ABORT, writer=server)
-                self._decide(server, txn, Decision.ABORT)
-                resp = Decision.ABORT
-            else:
-                resp = "UNKNOWN"  # voted yes, uncertain — cannot help
-            self.send(server, asker, txn, f"dec-resp:{server}:{attempt}", resp)
-
-        self.sim._schedule(self.sim.now + delay, handle)
-
-    # ========================================================================
-    # Recovery (Table 1 / Table 2 "During Recovery" column)
-    # ========================================================================
     def recover_txn(self, spec: TxnSpec, me: str):
-        """Recovered node resolving one in-flight transaction."""
-
-        def proc():
-            txn = spec.txn_id
-            state = yield self.storage.read_state(me, txn, writer=me)
-            out = TxnOutcome(txn_id=txn, node=me,
-                             decision=Decision.UNDETERMINED)
-            if state in (Vote.COMMIT, Vote.ABORT):
-                out.decision = Decision(state.value)
-            elif state is None or state == Vote.VOTE_YES:
-                if state is None and self.cfg.protocol == "2pc":
-                    # 2PC recovery without a vote: presumed abort.
-                    yield self.storage.log(me, txn, Vote.ABORT, writer=me)
-                    out.decision = Decision.ABORT
-                else:
-                    if self.cfg.protocol == "cornus":
-                        d = yield from self._termination(spec, me, out)
-                    else:
-                        d = yield from self._coop_termination(spec, me, out)
-                    out.decision = d if d else Decision.UNDETERMINED
-                    if d:
-                        yield self.storage.log(
-                            me, txn, Vote.COMMIT if d == Decision.COMMIT
-                            else Vote.ABORT, writer=me)
-            if out.decision != Decision.UNDETERMINED:
-                self._decide(me, txn, out.decision)
-            out.done_at_ms = self.sim.now
-            self.outcomes[(txn, me + ":recovery")] = out
-            return out
-
-        return self.sim.process(proc())
+        """Recovered node resolving one in-flight transaction (Table 1/2
+        "During Recovery"); outcome recorded under (txn, me + ":recovery")."""
+        return self.sim.process(self.protocol.recover(spec, me))

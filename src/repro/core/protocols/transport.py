@@ -1,0 +1,111 @@
+"""Compute-layer transport: messaging, liveness, and per-txn message slots.
+
+Extracted from the old ``Cluster`` god-class so protocol strategies share one
+substrate: asynchronous one-way messages with geo-aware delays, per-node
+fail/recover schedules, and (dst, txn, kind)-keyed rendezvous slots that a
+storage service can also deliver into directly (vote forwarding, Table 3's
+``cornus-opt1`` / ``paxos-commit`` rows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..sim import Event, Sim
+from ..storage import COMPUTE_RTT_MS, RegionTopology
+
+
+@dataclass
+class ProtocolConfig:
+    protocol: str = "cornus"            # any name in protocols.registry
+    rtt_ms: float = COMPUTE_RTT_MS      # compute <-> compute round trip
+    vote_timeout_ms: float = 25.0       # coordinator waiting for votes
+    decision_timeout_ms: float = 25.0   # participant waiting for decision
+    votereq_timeout_ms: float = 25.0    # participant waiting for VOTE-REQ
+    termination_retry_ms: float = 25.0  # retry period for termination protocol
+    # 2PC cooperative termination polls peers with this period while blocked.
+    coop_retry_ms: float = 25.0
+    # Early Lock Release / speculative precommit (§5.6): locks drop at
+    # precommit instead of at decision. Consumed by the txn executor via the
+    # on_precommit hook.
+    elr: bool = False
+    # Geo-distributed deployments (extended §6): per-link RTTs come from a
+    # RegionTopology + node→region placement instead of the scalar rtt_ms.
+    topology: Optional[RegionTopology] = None
+    placement: Dict[str, str] = field(default_factory=dict)
+
+    def link_rtt_ms(self, src: str, dst: str) -> float:
+        """Round trip between two compute nodes under the active model."""
+        if self.topology is None:
+            return self.rtt_ms
+        default = self.topology.regions[0]
+        return self.topology.rtt_ms(self.placement.get(src, default),
+                                    self.placement.get(dst, default))
+
+
+class Transport:
+    """N compute nodes inside one Sim: liveness schedules + messaging."""
+
+    def __init__(self, sim: Sim, nodes: List[str], cfg: ProtocolConfig):
+        self.sim = sim
+        self.nodes = list(nodes)
+        self.cfg = cfg
+        self.fail_at: Dict[str, float] = {n: float("inf") for n in nodes}
+        self.recover_at: Dict[str, float] = {n: float("inf") for n in nodes}
+        self._slots: Dict[Tuple[str, str, str], Event] = {}
+
+    # -- liveness -----------------------------------------------------------
+    def alive(self, node: str) -> bool:
+        t = self.sim.now
+        return t < self.fail_at[node] or t >= self.recover_at[node]
+
+    def fail(self, node: str, at: float, recover_at: float = float("inf")):
+        self.fail_at[node] = at
+        self.recover_at[node] = recover_at
+
+    # -- messaging ----------------------------------------------------------
+    def slot(self, dst: str, txn: str, kind: str) -> Event:
+        key = (dst, txn, kind)
+        ev = self._slots.get(key)
+        if ev is None:
+            ev = self.sim.event()
+            self._slots[key] = ev
+        return ev
+
+    def send(self, src: str, dst: str, txn: str, kind: str, value=None):
+        """One-way message; delivered after rtt/2 if both ends are alive."""
+        if not self.alive(src):
+            return
+        delay = 0.0 if src == dst else self.cfg.link_rtt_ms(src, dst) / 2.0
+        slot = self.slot(dst, txn, kind)
+
+        def deliver():
+            if self.alive(dst):
+                slot.trigger(value)
+
+        self.sim._schedule(self.sim.now + delay, deliver)
+
+    def deliver(self, dst: str, txn: str, kind: str, value=None):
+        """Immediate delivery into a slot (no extra network delay).
+
+        Used by storage services that forward votes: the service already
+        modelled the acceptor/leader → ``dst`` network leg, so the message
+        lands NOW — unless ``dst`` is down, in which case it is dropped like
+        any other message to a dead node.
+        """
+        if self.alive(dst):
+            self.slot(dst, txn, kind).trigger(value)
+
+    def wait(self, dst: str, txn: str, kind: str, timeout_ms: float) -> Event:
+        """Event yielding ('msg', value) or ('timeout', None)."""
+        slot = self.slot(dst, txn, kind)
+        to = self.sim.timeout(timeout_ms)
+        any_ev = self.sim.any_of([slot, to])
+        done = self.sim.event()
+
+        def on(ev):
+            idx, val = ev.value
+            done.trigger(("msg", val) if idx == 0 else ("timeout", None))
+
+        any_ev.subscribe(on)
+        return done

@@ -304,9 +304,18 @@ class SimStorage:
                            lambda: done.trigger(result.get("value")))
         return done
 
-    def log_once(self, partition: str, txn: str, state: Vote, writer: str = ""):
+    def log_once(self, partition: str, txn: str, state: Vote, writer: str = "",
+                 forward_to: Optional[str] = None, on_forward=None):
         ms = self.model.sample(self.rng, self.model.conditional_write_ms)
-        return self._op(ms, lambda: self.store.log_once(partition, txn, state, writer))
+        ev = self._op(ms, lambda: self.store.log_once(partition, txn, state, writer))
+        if on_forward is not None:
+            # Vote forwarding (Table 3 cornus-opt1 / paxos-commit): the
+            # service pushes the slot's decided value to ``forward_to`` in
+            # parallel with the reply to the writer.  A single unreplicated
+            # service has no distinct acceptor/leader position, so the
+            # forwarded copy lands when the response does.
+            ev.subscribe(lambda e: on_forward(e.value))
+        return ev
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
         ms = self.model.sample(self.rng, self.model.plain_write_ms)
@@ -637,6 +646,31 @@ class ReplicatedStore:
         return out
 
 
+class _Forward:
+    """One vote-forwarding obligation on a log_once call (Table 3's
+    ``cornus-opt1`` / ``paxos-commit`` rows): deliver the slot's decided
+    value to a third-party compute node (the transaction coordinator)
+    exactly once, from wherever the decision was reached — the leader in
+    leader mode, the quorum-th acceptor ack in coloc mode."""
+
+    __slots__ = ("region", "_deliver", "fired", "scheduled")
+
+    def __init__(self, region: str, deliver) -> None:
+        self.region = region
+        self._deliver = deliver
+        self.fired = False
+        self.scheduled = False
+
+    def deliver_now(self, value: Vote) -> None:
+        if not self.fired:
+            self.fired = True
+            self._deliver(value)
+
+    def schedule(self, sim, delay_ms: float, value: Vote) -> None:
+        self.scheduled = True
+        sim._schedule(sim.now + delay_ms, lambda: self.deliver_now(value))
+
+
 class ReplicatedSimStorage:
     """Quorum-replicated storage service inside the discrete-event sim.
 
@@ -714,11 +748,16 @@ class ReplicatedSimStorage:
 
     # -- scatter/gather RPC layer ------------------------------------------
     def _scatter(self, src_region: str, fn, mean_ms: float, done_pred,
-                 self_idx: Optional[int] = None):
+                 self_idx: Optional[int] = None, also=None):
         """Send ``fn(replica, i)`` to every replica; the returned Event
         triggers with [(i, result), ...] once ``done_pred`` is satisfied,
         all replicas answered, or ``op_timeout_ms`` elapsed.  A replica dead
-        at apply time silently drops the request."""
+        at apply time silently drops the request.
+
+        ``also=(region, cb)`` models acceptor-side forwarding: each replica
+        that applies the request ALSO sends its result toward ``region``,
+        where ``cb(i, result)`` runs at arrival time (paxos-commit's
+        "acceptors forward to the coordinator")."""
         done = self.sim.event()
         acc = {"resps": [], "count": 0}
 
@@ -744,6 +783,12 @@ class ReplicatedSimStorage:
                               or acc["count"] >= self.n)
 
                 self.sim._schedule(self.sim.now + net, respond)
+                if also is not None:
+                    fwd_region, cb = also
+                    fwd_net = self.topology.rtt_ms(
+                        self.replica_regions[i], fwd_region) / 2.0
+                    self.sim._schedule(self.sim.now + fwd_net,
+                                       lambda i=i, val=val: cb(i, val))
 
             self.sim._schedule(self.sim.now + net + service, apply)
         self.sim._schedule(self.sim.now + self.op_timeout_ms,
@@ -769,10 +814,15 @@ class ReplicatedSimStorage:
             self.sim._schedule(self.sim.now + net + service, apply)
 
     # -- leader routing ----------------------------------------------------
-    def _via_leader(self, caller: str, inner):
+    def _via_leader(self, caller: str, inner, forward: Optional[_Forward] = None):
         """Route one op through the current leader; retries over failover.
         (Leader death mid-round is modelled at op granularity: the caller's
-        scatter just runs from the leader's region.)"""
+        scatter just runs from the leader's region.)
+
+        With ``forward``, the leader pushes the result toward the forward
+        target the moment the quorum round completes — in parallel with the
+        reply hop back to the caller (cornus-opt1's "Paxos leader forwards
+        the vote to the coordinator")."""
         src = self._region_of(caller)
         while True:
             li = self._leader_idx()
@@ -785,6 +835,10 @@ class ReplicatedSimStorage:
                 yield self.sim.timeout(self.op_timeout_ms / 4.0)
                 continue
             result = yield from inner(li, lr)
+            if forward is not None and not forward.fired:
+                forward.schedule(self.sim,
+                                 self.topology.rtt_ms(lr, forward.region) / 2.0,
+                                 result)
             yield self.sim.timeout(self.topology.rtt_ms(lr, src) / 2.0)
             return result
 
@@ -796,7 +850,8 @@ class ReplicatedSimStorage:
         return oks >= self.quorum or shortcut
 
     def _quorum_log_once(self, src_region: str, self_idx: Optional[int],
-                         owner_fast: bool, key, state: Vote, writer: str):
+                         owner_fast: bool, key, state: Vote, writer: str,
+                         forward: Optional[_Forward] = None):
         pid = None
         attempt = 0
         while True:
@@ -830,7 +885,8 @@ class ReplicatedSimStorage:
                 lambda r, i, b=ballot, v=adopted: r.accept(key, b, v),
                 self.model.conditional_write_ms,
                 lambda rs: sum(1 for _, ok in rs if ok) >= self.quorum,
-                self_idx)
+                self_idx,
+                also=self._acceptor_forward(forward, adopted))
             if sum(1 for _, ok in resps if ok) >= self.quorum:
                 self._cast(src_region,
                            lambda r, i, v=adopted: r.learn(key, v, writer),
@@ -839,6 +895,23 @@ class ReplicatedSimStorage:
                 return adopted
             attempt += 1
             yield self.sim.timeout(self._backoff(attempt))
+
+    def _acceptor_forward(self, forward: Optional[_Forward], adopted: Vote):
+        """Per-accept-round forwarding state: each acceptor that accepts
+        sends its ack toward the forward target; the target 'learns' the
+        value when the quorum-th ack arrives (it can count, Paxos Commit
+        §Gray & Lamport) — which is when we deliver."""
+        if forward is None:
+            return None
+        acks = {"n": 0}
+
+        def cb(i: int, ok: bool) -> None:
+            if ok:
+                acks["n"] += 1
+                if acks["n"] >= self.quorum:
+                    forward.deliver_now(adopted)
+
+        return (forward.region, cb)
 
     def _quorum_write(self, src_region: str, self_idx: Optional[int],
                       key, state: Vote, writer: str, mean_ms: float):
@@ -873,19 +946,33 @@ class ReplicatedSimStorage:
 
     # -- public SimStorage-compatible API ----------------------------------
     def log_once(self, partition: str, txn: str, state: Vote,
-                 writer: str = ""):
+                 writer: str = "", forward_to: Optional[str] = None,
+                 on_forward=None):
+        """Quorum LogOnce; with ``forward_to``/``on_forward`` the service
+        additionally pushes the slot's decided value to a third compute
+        node: from the leader after its accept round in leader mode
+        (cornus-opt1), from each acceptor with quorum counting at the
+        target in coloc mode (paxos-commit)."""
         self.requests += 1
         key = (partition, txn)
+        fwd = (None if on_forward is None
+               else _Forward(self._region_of(forward_to), on_forward))
 
         def gen():
             if self.mode == "coloc":
                 owner = bool(writer) and writer == partition
                 result = yield from self._quorum_log_once(
-                    self._region_of(writer), None, owner, key, state, writer)
+                    self._region_of(writer), None, owner, key, state, writer,
+                    forward=fwd)
             else:
                 result = yield from self._via_leader(
                     writer, lambda li, lr: self._quorum_log_once(
-                        lr, li, li == 0, key, state, writer))
+                        lr, li, li == 0, key, state, writer), forward=fwd)
+            if fwd is not None and not fwd.fired and not fwd.scheduled:
+                # Raced/short-circuited paths (value already decided before
+                # our accept round): the caller's reply doubles as the
+                # forward source.
+                fwd.deliver_now(result)
             return result
 
         return self.sim.process(gen())

@@ -1,107 +1,40 @@
-"""Protocol variants evaluated in §5.6 and Table 3.
+"""Table-3 deployment rows + the analytical RTT model (§5.6, extended §6).
 
-* ``CoordinatorLogCluster`` — the coordinator-log (CL) optimization
-  [Stamos & Cristian]: participants reply votes WITHOUT logging; the
-  coordinator batches all participants' logs + its decision into ONE storage
-  write, then replies to the caller.  Faster than 2PC (one batched write vs
-  sequential prepare-then-decision), slower than Cornus (the caller still
-  waits for a storage write), and it violates site autonomy (§5.6).
+The protocol *implementations* live in ``repro.core.protocols`` (one
+registered strategy class per family member).  This module keeps:
 
 * ``rtt_table()`` — the analytical RTT model of Table 3 for protocols
   integrating with Paxos-replicated storage.
+* ``SIMULATED_RTT_ROWS`` — every Table-3 row's runnable deployment:
+  (registered protocol name, replicated-storage mode).
+* ``measured_caller_latency_ms()`` — runs one commit per row on the
+  discrete-event sim and must land EXACTLY on the analytic RTT multiple.
+* ``CoordinatorLogCluster`` — deprecated alias of
+  ``Cluster(..., protocol="cl")``; use the registry instead.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import warnings
+from typing import Dict
 
 from .protocol import Cluster, ProtocolConfig
-from .state import Decision, TxnOutcome, TxnSpec, Vote
+from .state import Decision, TxnSpec
 
 
 class CoordinatorLogCluster(Cluster):
-    """2PC with centralized (coordinator) logging — §5.6 'CL'."""
+    """Deprecated: use ``Cluster`` with ``ProtocolConfig(protocol="cl")``.
 
-    def _coordinator(self, spec: TxnSpec):
-        cfg, sim, me = self.cfg, self.sim, spec.coordinator
-        txn = spec.txn_id
-        t0 = sim.now
-        out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
+    Kept so pre-registry call sites keep working; it pins the protocol to
+    the registered ``cl`` strategy regardless of ``cfg.protocol`` (the old
+    class was paired with ``protocol="2pc"`` configs).
+    """
 
-        if spec.all_read_only and spec.read_only_known_upfront:
-            out.decision = Decision.COMMIT
-            out.caller_latency_ms = 0.0
-            out.done_at_ms = sim.now
-            self._decide(me, txn, Decision.COMMIT)
-            self._record(out)
-            return out
-
-        for p in spec.participants:
-            if p != me:
-                self.send(me, p, txn, "vote-req",
-                          {"participants": list(spec.participants)})
-        pending = [p for p in spec.participants if p != me]
-        waits = [self.wait(me, txn, f"vote:{p}", cfg.vote_timeout_ms)
-                 for p in pending]
-        results = yield self.sim.all_of(waits)
-        prepare_done = sim.now
-        out.prepare_ms = prepare_done - t0
-        my_vote = "VOTE-YES" if spec.vote_of(me) else "ABORT"
-        any_abort = (any(tag == "msg" and val == "ABORT"
-                         for tag, val in results)
-                     or any(tag == "timeout" for tag, val in results)
-                     or my_vote == "ABORT")
-        decision = Decision.ABORT if any_abort else Decision.COMMIT
-
-        # ONE batched write: every participant's redo log + the decision.
-        yield self.storage.log_batch(
-            me, txn, Vote.COMMIT if decision == Decision.COMMIT
-            else Vote.ABORT, n_records=len(spec.participants) + 1, writer=me)
-        if not self.alive(me):
-            return out
-
-        out.decision = decision
-        out.caller_latency_ms = sim.now - t0
-        out.commit_ms = sim.now - prepare_done
-        self._decide(me, txn, decision)
-        for p in pending:
-            self.send(me, p, txn, "decision", decision)
-        out.done_at_ms = sim.now
-        self._record(out)
-        return out
-
-    def _participant(self, spec: TxnSpec, me: str):
-        cfg, sim = self.cfg, self.sim
-        txn = spec.txn_id
-        if me == spec.coordinator:
-            return
-        out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
-
-        if spec.all_read_only and spec.read_only_known_upfront:
-            self._decide(me, txn, Decision.COMMIT)
-            out.decision = Decision.COMMIT
-            self._record(out)
-            return out
-
-        tag, msg = yield self.wait(me, txn, "vote-req", cfg.votereq_timeout_ms)
-        if tag == "timeout" or not self.alive(me):
-            self._decide(me, txn, Decision.ABORT)
-            out.decision = Decision.ABORT
-            self._record(out)
-            return out
-        st = self._local(me, txn)
-        # CL: reply the vote immediately — NO local logging. The vote reply
-        # carries this participant's redo records (bigger ack message, §5.6).
-        vote = "VOTE-YES" if spec.vote_of(me) else "ABORT"
-        st["status"] = "voted"
-        self.send(me, spec.coordinator, txn, f"vote:{me}", vote)
-        tag, decision = yield self.wait(me, txn, "decision",
-                                        cfg.decision_timeout_ms)
-        if tag == "msg":
-            self._decide(me, txn, decision)
-            out.decision = decision
-        out.done_at_ms = sim.now
-        self._record(out)
-        return out
+    def __init__(self, sim, storage, nodes, cfg: ProtocolConfig):
+        warnings.warn(
+            "CoordinatorLogCluster is deprecated; use "
+            "Cluster(sim, storage, nodes, ProtocolConfig(protocol='cl'))",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(sim, storage, nodes, cfg, protocol="cl")
 
 
 def rtt_table() -> Dict[str, Dict]:
@@ -135,13 +68,15 @@ def predicted_caller_latency_ms(protocol: str, paxos_rtt_ms: float) -> float:
     return rtt_table()[protocol]["total"] * paxos_rtt_ms
 
 
-# Table-3 rows the replicated simulator can actually run, and the storage
-# deployment mode each corresponds to.
+# Every Table-3 row now has a runnable simulated deployment:
+# row name -> (registered protocol name, replicated-storage mode).
 SIMULATED_RTT_ROWS = {
     "2pc": ("2pc", "leader"),
     "cornus": ("cornus", "leader"),
+    "cornus-opt1": ("cornus-opt1", "leader"),
     "2pc-coloc": ("2pc", "coloc"),
     "cornus-coloc": ("cornus", "coloc"),
+    "paxos-commit": ("paxos-commit", "coloc"),
 }
 
 
@@ -153,8 +88,9 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
 
     Runs ONE commit on the discrete-event sim against a quorum-replicated
     store under a uniform topology where every link (compute↔compute,
-    compute↔storage, inter-replica) costs ``paxos_rtt_ms`` and service times
-    are negligible — so the result should land on Table 3's RTT multiples.
+    compute↔storage, inter-replica) costs ``paxos_rtt_ms`` and service
+    times are ZERO — so the result lands exactly on Table 3's RTT
+    multiples (validated with equality, not a tolerance, in the tests).
     """
     from .sim import Sim
     from .storage import LatencyModel, RegionTopology, ReplicatedSimStorage
@@ -162,16 +98,16 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
     if protocol not in SIMULATED_RTT_ROWS:
         raise ValueError(f"no simulated deployment for {protocol!r}; "
                          f"one of {sorted(SIMULATED_RTT_ROWS)}")
-    base, mode = SIMULATED_RTT_ROWS[protocol]
+    proto, mode = SIMULATED_RTT_ROWS[protocol]
     topo = RegionTopology.uniform("table3", ("r0",), paxos_rtt_ms)
-    model = LatencyModel("paxos-null", conditional_write_ms=1e-3,
-                         plain_write_ms=1e-3, read_ms=1e-3, jitter=0.0)
+    model = LatencyModel("paxos-null", conditional_write_ms=0.0,
+                         plain_write_ms=0.0, read_ms=0.0, jitter=0.0)
     sim = Sim()
     storage = ReplicatedSimStorage(sim, model, n_replicas=n_replicas,
                                    seed=seed, topology=topo, mode=mode)
     nodes = ["c"] + [f"p{i}" for i in range(n_participants)]
     tmo = 50.0 * paxos_rtt_ms
-    cfg = ProtocolConfig(protocol=base, topology=topo,
+    cfg = ProtocolConfig(protocol=proto, topology=topo,
                          vote_timeout_ms=tmo, decision_timeout_ms=tmo,
                          votereq_timeout_ms=tmo, termination_retry_ms=tmo,
                          coop_retry_ms=tmo)

@@ -3,9 +3,10 @@
 Reproduces the paper's measurement setup (§5.1): N compute nodes, each with
 `threads_per_node` closed-loop workers executing stored-procedure txns; data
 accesses go to the owning partition over 0.5 ms RTT RPCs; NO-WAIT 2PL aborts
-on conflict with exponential backoff + retry; commit runs Cornus / 2PC / CL
-against the simulated storage service.  Latencies are collected for
-*distributed* transactions only, like the paper.
+on conflict with exponential backoff + retry; commit runs whatever protocol
+``BenchConfig.protocol`` names in the commit-protocol registry (cornus, 2pc,
+cl, cornus-opt1, paxos-commit, ...) against the simulated storage service.
+Latencies are collected for *distributed* transactions only, like the paper.
 """
 from __future__ import annotations
 
@@ -14,18 +15,18 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from ..core.protocol import Cluster, ProtocolConfig
+from ..core.protocols import get_protocol
 from ..core.sim import Sim
 from ..core.state import Decision, TxnSpec, Vote
 from ..core.storage import (COMPUTE_RTT_MS, LatencyModel, RegionTopology,
                             ReplicatedSimStorage, SimStorage)
-from ..core.variants import CoordinatorLogCluster
 from .store import LockMode, LockTable
 from .workload import Txn
 
 
 @dataclass
 class BenchConfig:
-    protocol: str = "cornus"          # cornus | 2pc | cl
+    protocol: str = "cornus"          # any registered protocol name
     n_nodes: int = 4
     threads_per_node: int = 8
     horizon_ms: float = 2000.0        # issue window (sim time)
@@ -40,7 +41,9 @@ class BenchConfig:
     topology: Optional[RegionTopology] = None
     placement: Optional[Dict[str, str]] = None   # node -> region
     replica_regions: Optional[List[str]] = None  # per-replica region
-    storage_mode: str = "leader"      # leader | coloc
+    # leader | coloc | None → the protocol's preferred mode (paxos-commit
+    # needs participants coordinating replication, i.e. coloc).
+    storage_mode: Optional[str] = None
     # (replica_idx, fail_at_ms[, recover_at_ms]) outage schedule
     replica_failures: tuple = ()
     # Restrict closed-loop clients to these nodes (geo: home-region
@@ -92,14 +95,19 @@ def run_bench(workload_factory, model: LatencyModel,
               cfg: BenchConfig) -> BenchResult:
     """Run one trial; `workload_factory(nodes, seed)` builds the generator."""
     sim = Sim()
+    # Resolve the protocol up front (validates the name; no branching —
+    # every protocol-specific behaviour lives behind the strategy class).
+    proto_cls = get_protocol(cfg.protocol)
     nodes = [f"n{i}" for i in range(cfg.n_nodes)]
     placement = dict(cfg.placement) if cfg.placement else (
         cfg.topology.place_round_robin(nodes) if cfg.topology else {})
     if cfg.replication > 1 or cfg.topology is not None:
+        mode = (cfg.storage_mode or proto_cls.preferred_storage_mode
+                or "leader")
         storage = ReplicatedSimStorage(
             sim, model, n_replicas=cfg.replication, seed=cfg.seed,
             topology=cfg.topology, replica_regions=cfg.replica_regions,
-            placement=placement, mode=cfg.storage_mode)
+            placement=placement, mode=mode)
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
     else:
@@ -111,14 +119,13 @@ def run_bench(workload_factory, model: LatencyModel,
     topo_rtt = cfg.topology.max_rtt_ms if cfg.topology else 0.0
     tmo = max(25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
               + 8.0 * topo_rtt)
-    pcfg = ProtocolConfig(protocol="2pc" if cfg.protocol == "cl" else cfg.protocol,
+    pcfg = ProtocolConfig(protocol=cfg.protocol,
                           rtt_ms=cfg.rtt_ms, elr=cfg.elr,
                           vote_timeout_ms=tmo, decision_timeout_ms=tmo,
                           votereq_timeout_ms=tmo, termination_retry_ms=tmo,
                           coop_retry_ms=tmo,
                           topology=cfg.topology, placement=placement)
-    cluster_cls = CoordinatorLogCluster if cfg.protocol == "cl" else Cluster
-    cluster = cluster_cls(sim, storage, nodes, pcfg)
+    cluster = Cluster(sim, storage, nodes, pcfg)
     locks = {n: LockTable(n) for n in nodes}
 
     def release(node: str, txn: str, *_):

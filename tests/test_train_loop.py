@@ -26,15 +26,19 @@ def base_run(tmp, **kw):
 
 
 def test_loss_decreases_and_ckpts_commit(tmp_path):
-    res = train(base_run(tmp_path))
-    assert res.steps_done == 24
-    first = np.mean(res.losses[:4])
-    last = np.mean(res.losses[-4:])
+    # 32 steps (not 24) and wide 8-step averaging windows: at 24 steps the
+    # loss plateaus for some seeds (warmup covers 20 of them, so barely 4
+    # run at full lr) and the 4-step window verdict flips seed-dependently.
+    # 12 full-lr steps + 8-step windows give a stable margin.
+    res = train(base_run(tmp_path, steps=32))
+    assert res.steps_done == 32
+    first = np.mean(res.losses[:8])
+    last = np.mean(res.losses[-8:])
     assert last < first, f"no learning: {first} -> {last}"
-    assert len(res.ckpt_outcomes) == 3
+    assert len(res.ckpt_outcomes) == 4
     assert all(o.decision == Decision.COMMIT for o in res.ckpt_outcomes)
     store = FileStore(str(tmp_path))
-    assert latest_committed(store, _hosts(3)) == 24
+    assert latest_committed(store, _hosts(3)) == 32
 
 
 def test_crash_restart_is_exact(tmp_path):
