@@ -1,0 +1,184 @@
+"""Contention sweep: storage-side group commit under hot-partition skew.
+
+Sweeps clients × zipf partition skew × protocol × batch mode on a
+replicated (R=3) storage service whose per-partition log device is SERIAL
+(one write round trip in flight at a time — the premise of group commit).
+Three batch modes bracket the design space:
+
+  nobatch    – serial lane, max_batch=1: every request pays its own queued
+               round trip (the window=0 baseline of the speedup claim).
+  piggyback  – window=0, max_batch=64: requests that arrive while a flush
+               is in flight coalesce into the next one; zero added latency
+               when idle.
+  window2ms  – a 2 ms formation window on top: deeper batches, bounded
+               added latency.
+
+Emits ``name,value,derived`` CSV rows (latency AND throughput per config,
+plus batched-vs-unbatched speedups and storage round-trip counts) so one
+run yields the latency-vs-throughput trade-off curve.
+
+Standalone entry point with a CI regression gate::
+
+    python -m benchmarks.contention --quick --check-baseline
+    python -m benchmarks.contention --quick --write-baseline
+
+The baseline (``BENCH_contention.json`` at the repo root) pins quick-mode
+committed-txn throughput per configuration; ``--check-baseline`` exits
+non-zero when any tracked throughput regresses more than 15%.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import AZURE_REDIS
+from repro.txn import BenchConfig, YCSBWorkload, run_bench
+
+Row = Tuple[str, float, str]
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_contention.json")
+REGRESSION_TOLERANCE = 0.15     # CI fails below 85% of baseline throughput
+
+BATCH_MODES = {
+    "nobatch": dict(storage_serial=True, batch_max=1),
+    "piggyback": dict(storage_serial=True, batch_max=64),
+    "window2ms": dict(storage_serial=True, batch_max=64,
+                      batch_window_ms=2.0),
+}
+
+
+def run_one(proto: str, clients: int, theta: float, mode: str,
+            replication: int = 3, horizon_ms: float = 600.0, seed: int = 3):
+    n_nodes = 4
+    assert clients % n_nodes == 0
+
+    def wl(nodes, seed):
+        # Few accesses per txn + zipf-skewed partition choice: the hot
+        # partition's serial log lane, not execution, is the bottleneck.
+        return YCSBWorkload(nodes, accesses_per_txn=4, partition_theta=theta,
+                            keys_per_partition=10_000, seed=seed)
+
+    cfg = BenchConfig(protocol=proto, n_nodes=n_nodes,
+                      threads_per_node=clients // n_nodes,
+                      horizon_ms=horizon_ms, replication=replication,
+                      seed=seed, **BATCH_MODES[mode])
+    return run_bench(wl, AZURE_REDIS, cfg)
+
+
+def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
+    """clients × zipf partition skew × protocol × batch mode."""
+    grid_clients = (32,) if quick else (16, 32, 64)
+    grid_theta = (0.9,) if quick else (0.0, 0.9)
+    protos = ("cornus", "2pc") if quick else (
+        "cornus", "2pc", "cornus-opt1", "paxos-commit")
+    horizon = 600.0 if quick else 900.0
+
+    rows: List[Row] = []
+    for clients in grid_clients:
+        for theta in grid_theta:
+            tput: Dict[str, Dict[str, float]] = {}
+            for proto in protos:
+                tput[proto] = {}
+                for mode in BATCH_MODES:
+                    r = run_one(proto, clients, theta, mode,
+                                replication=replication, horizon_ms=horizon)
+                    tput[proto][mode] = r.throughput_tps
+                    key = (f"contention/r{replication}/{proto}/{mode}/"
+                           f"c{clients}/theta{theta}")
+                    derived = (f"commits={r.commits} aborts={r.aborts} "
+                               f"gaveups={r.gaveups} "
+                               f"rtrips={r.storage_round_trips}")
+                    rows.append((f"{key}/tput_tps", r.throughput_tps, derived))
+                    rows.append((f"{key}/avg_ms", r.avg_latency_ms,
+                                 f"p99={r.p99_latency_ms:.2f}"))
+                for mode in ("piggyback", "window2ms"):
+                    base = max(tput[proto]["nobatch"], 1e-9)
+                    rows.append(
+                        (f"contention/r{replication}/{proto}/{mode}/"
+                         f"c{clients}/theta{theta}/batch_speedup",
+                         tput[proto][mode] / base,
+                         "committed-txn throughput vs window=0 serial"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Baseline gate (CI)
+# ---------------------------------------------------------------------------
+def _tracked(rows: List[Row]) -> Dict[str, float]:
+    return {name: value for name, value, _ in rows
+            if name.endswith("/tput_tps")}
+
+
+def write_baseline(rows: List[Row], path: str = BASELINE_PATH) -> None:
+    payload = {
+        "schema": 1,
+        "bench": "benchmarks.contention --quick",
+        "note": "quick-mode committed-txn throughput per configuration; "
+                "CI fails when a tracked value drops below "
+                f"{1 - REGRESSION_TOLERANCE:.0%} of this baseline "
+                "(deterministic sim: genuine drift means a code change).",
+        "tput_tps": _tracked(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_baseline(rows: List[Row], path: str = BASELINE_PATH) -> bool:
+    with open(path) as f:
+        baseline = json.load(f)["tput_tps"]
+    got = _tracked(rows)
+    ok = True
+    for name, want in sorted(baseline.items()):
+        have = got.get(name)
+        if have is None:
+            print(f"# baseline MISSING from sweep: {name}", file=sys.stderr)
+            ok = False
+            continue
+        floor = want * (1.0 - REGRESSION_TOLERANCE)
+        verdict = "ok" if have >= floor else "REGRESSION"
+        if have < floor:
+            ok = False
+        print(f"# baseline {verdict}: {name} {have:.1f} vs {want:.1f} "
+              f"(floor {floor:.1f})", file=sys.stderr)
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid / issue windows (CI, <60s)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"pin current quick-mode throughput "
+                         f"to {os.path.basename(BASELINE_PATH)}")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail (exit 1) on >15%% throughput regression "
+                         "against the pinned baseline")
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    rows = sweep(quick=args.quick or args.write_baseline
+                 or args.check_baseline)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.4f},{derived}")
+    print(f"# sweep took {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.write_baseline:
+        write_baseline(rows, args.baseline)
+        print(f"# baseline written to {args.baseline}", file=sys.stderr)
+    if args.check_baseline:
+        if not check_baseline(rows, args.baseline):
+            print("::error::contention throughput regressed >15% "
+                  "against BENCH_contention.json", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

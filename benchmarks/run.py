@@ -18,11 +18,13 @@ def main() -> None:
     ap.add_argument("--dryrun-dir", default="artifacts/dryrun")
     args = ap.parse_args()
 
-    from . import paper_figs, roofline, ckpt_bench
+    from . import contention, paper_figs, roofline, ckpt_bench
 
     paper_figs.QUICK = args.quick
 
     benches = [(f.__name__, f) for f in paper_figs.ALL]
+    benches.append(("contention_sweep",
+                    lambda: contention.sweep(quick=args.quick)))
     benches.append(("ckpt_commit", ckpt_bench.run))
     benches.append(("roofline", lambda: roofline.rows(args.dryrun_dir)))
 

@@ -14,7 +14,8 @@ from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
 from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       COMPUTE_RTT_MS, CROSS_REGION, CROSS_ZONE, INTRA_ZONE,
-                      SLOW_REDIS, FileStore, LatencyModel, MemoryStore,
+                      SLOW_REDIS, BatchConfig, BatchingStore, FileStore,
+                      GroupCommitIngress, LatencyModel, MemoryStore,
                       QuorumUnavailable, RegionTopology, ReplicaLog,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage,
                       merge_reads)
@@ -37,4 +38,5 @@ __all__ = [
     "RegionTopology", "INTRA_ZONE", "CROSS_ZONE", "CROSS_REGION",
     "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
     "QuorumUnavailable",
+    "BatchConfig", "BatchingStore", "GroupCommitIngress",
 ]

@@ -37,6 +37,29 @@ from .context import TxnContext
 from .transport import ProtocolConfig, Transport
 
 
+class VoteForward:
+    """The ``on_forward`` callback handed to ``log_once``: delivers a slot's
+    decided value into the coordinator's vote slot.  Besides being callable
+    (one delivery = one message), it exposes the transport payload so a
+    batched storage flush can coalesce several slots' forwards bound for
+    the same coordinator into ONE ``Transport.deliver_many`` push."""
+
+    __slots__ = ("transport", "dst", "txn", "kind")
+
+    def __init__(self, transport: Transport, dst: str, txn: str, kind: str):
+        self.transport = transport
+        self.dst = dst
+        self.txn = txn
+        self.kind = kind
+
+    def payload(self, v: Vote):
+        return (self.txn, self.kind,
+                "ABORT" if v == Vote.ABORT else "VOTE-YES")
+
+    def __call__(self, v: Vote) -> None:
+        self.transport.deliver(self.dst, *self.payload(v))
+
+
 class CommitProtocol:
     """Shared commit choreography; subclasses fill in the logging strategy."""
 
@@ -313,14 +336,9 @@ class CommitProtocol:
         """log_once kwargs that make the storage service forward the slot's
         decided value straight to the coordinator's vote slot (Table 3:
         'Paxos leader forwards vote' / 'acceptors forward to coordinator')."""
-        coord, txn = spec.coordinator, spec.txn_id
-
-        def on_forward(v: Vote) -> None:
-            self.transport.deliver(
-                coord, txn, f"vote:{me}",
-                "ABORT" if v == Vote.ABORT else "VOTE-YES")
-
-        return dict(forward_to=coord, on_forward=on_forward)
+        return dict(forward_to=spec.coordinator,
+                    on_forward=VoteForward(self.transport, spec.coordinator,
+                                           spec.txn_id, f"vote:{me}"))
 
     # ========================================================================
     # Recovery (Table 1 / Table 2 "During Recovery" column)

@@ -53,6 +53,8 @@ class Transport:
         self.fail_at: Dict[str, float] = {n: float("inf") for n in nodes}
         self.recover_at: Dict[str, float] = {n: float("inf") for n in nodes}
         self._slots: Dict[Tuple[str, str, str], Event] = {}
+        self.deliveries = 0        # storage→compute slot deliveries (payloads)
+        self.delivery_batches = 0  # message events carrying them
 
     # -- liveness -----------------------------------------------------------
     def alive(self, node: str) -> bool:
@@ -94,6 +96,21 @@ class Transport:
         any other message to a dead node.
         """
         if self.alive(dst):
+            self.deliveries += 1
+            self.delivery_batches += 1
+            self.slot(dst, txn, kind).trigger(value)
+
+    def deliver_many(self, dst: str,
+                     items: List[Tuple[str, str, object]]) -> None:
+        """Coalesced storage→coordinator delivery: one message event carrying
+        many ``(txn, kind, value)`` payloads — what a storage-side group
+        commit flush produces when several slots in one batch forward their
+        votes to the same compute node.  Counts as ONE delivery batch."""
+        if not items or not self.alive(dst):
+            return
+        self.delivery_batches += 1
+        for txn, kind, value in items:
+            self.deliveries += 1
             self.slot(dst, txn, kind).trigger(value)
 
     def wait(self, dst: str, txn: str, kind: str, timeout_ms: float) -> Event:

@@ -10,6 +10,7 @@ Only the features the protocol needs are implemented:
   * ``sim.timeout(dt, value)``        – fires after dt
   * ``sim.event()``                   – manually triggered
   * ``sim.process(gen)``              – spawn; returns its done-Event
+  * ``sim.timer(dt, fn)``             – cancellable callback (batch windows)
   * ``AnyOf`` / ``AllOf``             – composite waits (for vote collection
                                         with timeouts)
 """
@@ -77,6 +78,30 @@ class AllOf(Event):
             self.trigger([e.value for e in self._events])
 
 
+class Timer:
+    """Cancellable scheduled callback — the batch-window primitive.
+
+    Unlike ``timeout`` (an Event processes yield on), a Timer is owned by
+    infrastructure code that may need to disarm it before it fires: a
+    group-commit lane cancels its window timer when the batch fills up or
+    the lane flushes for another reason.
+    """
+
+    __slots__ = ("_fn", "cancelled")
+
+    def __init__(self, sim: "Sim", delay: float, fn: Callable[[], None]):
+        self._fn = fn
+        self.cancelled = False
+        sim._schedule(sim.now + max(0.0, delay), self._fire)
+
+    def _fire(self) -> None:
+        if not self.cancelled:
+            self._fn()
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
 class Process(Event):
     """Drives a generator; the Process *is* its completion event."""
 
@@ -122,6 +147,9 @@ class Sim:
         ev = Event(self)
         self._schedule(self.now + max(0.0, dt), lambda: ev.trigger(value))
         return ev
+
+    def timer(self, dt: float, fn: Callable[[], None]) -> Timer:
+        return Timer(self, dt, fn)
 
     def process(self, gen: Generator) -> Process:
         return Process(self, gen)

@@ -60,6 +60,17 @@ class LatencyModel:
         tail = 1.0 + (3.0 * rng.random() if u > 0.97 else 0.0)
         return mean_ms * (1.0 + self.jitter * (2.0 * rng.random() - 1.0)) * tail
 
+    def batched_write_ms(self, n_records: int,
+                         base_ms: Optional[float] = None) -> float:
+        """Mean service time for ONE write carrying ``n_records`` records.
+
+        The amortization model shared by the coordinator-log §5.6 batch
+        write and the storage-ingress group-commit lanes: one base service
+        time plus ``batch_size_factor`` payload growth per extra record.
+        """
+        base = self.plain_write_ms if base_ms is None else base_ms
+        return base * (1.0 + self.batch_size_factor * max(0, n_records - 1))
+
 
 AZURE_REDIS = LatencyModel("redis", conditional_write_ms=1.96,
                            plain_write_ms=1.84, read_ms=0.9)
@@ -132,6 +143,140 @@ CROSS_REGION = RegionTopology(
            ("eu-west", "us-east"): 76.0,
            ("eu-west", "us-west"): 140.0},
     default_cross_ms=100.0)
+
+
+# --------------------------------------------------------------------------
+# Storage-ingress group commit (batching layer)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BatchConfig:
+    """Group-commit knobs for one storage service.
+
+    The batching layer models the serial log device behind each partition:
+    when active, a partition admits ONE write round trip at a time and
+    requests that arrive meanwhile coalesce into the next batch, charged a
+    single base service time plus ``LatencyModel.batch_size_factor`` payload
+    growth (the same amortization the coordinator-log §5.6 variant uses for
+    its batched record).
+
+      window_ms  – batch formation window, counted from the first request
+                   in the batch.  0 = flush as soon as the lane is idle
+                   ("piggyback" group commit: only requests that arrived
+                   while the previous flush was in flight coalesce).
+      max_batch  – records per flush cap; a full batch flushes immediately.
+                   1 = a plain serial queue (no coalescing).
+      serial     – enable the per-partition serial lane even at window 0.
+
+    The DEFAULT config is inactive: every request keeps its own concurrent
+    round trip, bit-identical to the pre-batching simulator (fig10 /
+    Table-3 numbers are validated against this passthrough).
+    """
+
+    window_ms: float = 0.0
+    max_batch: int = 64
+    serial: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.serial or self.window_ms > 0.0
+
+
+class _BatchOp:
+    """One logical write queued at storage ingress."""
+
+    __slots__ = ("kind", "partition", "txn", "state", "writer", "n_records",
+                 "fwd", "done", "result", "key", "gen")
+
+    def __init__(self, kind: str, partition: str, txn: str, state: Vote,
+                 writer: str, n_records: int = 1, fwd=None):
+        assert kind in ("log_once", "log")
+        self.kind = kind
+        self.partition = partition
+        self.txn = txn
+        self.state = state
+        self.writer = writer
+        self.n_records = n_records
+        self.fwd = fwd                 # _Forward obligation (vote forwarding)
+        self.done = None               # per-op completion Event
+        self.result: Optional[Vote] = None
+        self.key = (partition, txn)
+        self.gen = 0                   # assigned at flush time for plain logs
+
+
+class _Lane:
+    __slots__ = ("pending", "busy", "timer", "ripe")
+
+    def __init__(self) -> None:
+        self.pending: List[_BatchOp] = []
+        self.busy = False              # a flush round trip is in flight
+        self.timer = None              # armed window timer
+        self.ripe = False              # window elapsed while lane was busy
+
+
+class GroupCommitIngress:
+    """Per-partition group-commit lanes in front of a simulated storage
+    service.  ``submit(op)`` returns the op's completion Event; the owning
+    service supplies ``flush_fn(partition, ops) -> Event`` which charges ONE
+    round trip, applies every op in arrival order (first-writer-wins per
+    slot is therefore preserved), triggers each ``op.done``, and triggers
+    the returned Event when the round trip completes (freeing the lane).
+    """
+
+    def __init__(self, sim, cfg: BatchConfig, flush_fn) -> None:
+        self.sim = sim
+        self.cfg = cfg
+        self.flush_fn = flush_fn
+        self._lanes: Dict[str, _Lane] = {}
+        self.flushes = 0
+        self.ops_in = 0
+        self.max_batch_seen = 0
+
+    def submit(self, op: _BatchOp):
+        op.done = self.sim.event()
+        lane = self._lanes.setdefault(op.partition, _Lane())
+        lane.pending.append(op)
+        self.ops_in += 1
+        self._poke(lane)
+        return op.done
+
+    def _poke(self, lane: _Lane) -> None:
+        if lane.busy or not lane.pending:
+            return
+        if self.cfg.window_ms > 0 and len(lane.pending) < self.cfg.max_batch:
+            if lane.timer is None:
+                lane.timer = self.sim.timer(self.cfg.window_ms,
+                                            lambda: self._fire(lane))
+            return
+        self._fire(lane)
+
+    def _fire(self, lane: _Lane) -> None:
+        if lane.timer is not None:
+            lane.timer.cancel()
+            lane.timer = None
+        if lane.busy:
+            lane.ripe = True           # flush the moment the lane frees up
+            return
+        if not lane.pending:
+            return
+        ops = lane.pending[:self.cfg.max_batch]
+        lane.pending = lane.pending[self.cfg.max_batch:]
+        lane.busy = True
+        self.flushes += 1
+        self.max_batch_seen = max(self.max_batch_seen, len(ops))
+        self.flush_fn(ops[0].partition, ops).subscribe(
+            lambda _ev, lane=lane: self._flushed(lane))
+
+    def _flushed(self, lane: _Lane) -> None:
+        lane.busy = False
+        if not lane.pending:
+            lane.ripe = False
+            return
+        if (lane.ripe or self.cfg.window_ms <= 0
+                or len(lane.pending) >= self.cfg.max_batch):
+            lane.ripe = False
+            self._fire(lane)
+        else:
+            self._poke(lane)           # arm a fresh window for the next batch
 
 
 # --------------------------------------------------------------------------
@@ -283,16 +428,22 @@ class SimStorage:
     loses by, and what the hypothesis tests perturb.
     """
 
-    def __init__(self, sim, model: LatencyModel, seed: int = 0) -> None:
+    def __init__(self, sim, model: LatencyModel, seed: int = 0,
+                 batch: Optional[BatchConfig] = None) -> None:
         self.sim = sim
         self.model = model
         self.store = MemoryStore()
         self.rng = random.Random(seed)
         self.requests = 0
+        self.round_trips = 0
+        self.batch = batch or BatchConfig()
+        self._ingress = (GroupCommitIngress(sim, self.batch, self._flush)
+                         if self.batch.active else None)
 
     # Each returns a sim Event yielding the op's result.
     def _op(self, service_ms: float, apply_fn):
         self.requests += 1
+        self.round_trips += 1
         done = self.sim.event()
         result = {}
 
@@ -304,8 +455,52 @@ class SimStorage:
                            lambda: done.trigger(result.get("value")))
         return done
 
+    def _flush(self, partition: str, ops: List[_BatchOp]):
+        """ONE storage round trip carrying every op in ``ops``: base service
+        time of the most expensive op kind, grown by ``batch_size_factor``
+        per extra record; all ops apply in arrival order at t + service/2
+        (so first-writer-wins CAS races resolve exactly as if the ops had
+        been issued back to back) and every caller's reply — plus any vote
+        forwarding — lands with the single response at t + service."""
+        self.requests += len(ops)
+        self.round_trips += 1
+        base = max(self.model.conditional_write_ms if op.kind == "log_once"
+                   else self.model.plain_write_ms for op in ops)
+        n = sum(op.n_records for op in ops)
+        ms = self.model.sample(self.rng, self.model.batched_write_ms(n, base))
+        done = self.sim.event()
+
+        def apply():
+            for op in ops:
+                if op.kind == "log_once":
+                    op.result = self.store.log_once(op.partition, op.txn,
+                                                    op.state, op.writer)
+                else:
+                    op.result = self.store.log(op.partition, op.txn,
+                                               op.state, op.writer)
+
+        def respond():
+            for op in ops:
+                op.done.trigger(op.result)
+                if op.fwd is not None:
+                    op.fwd(op.result)
+            done.trigger(len(ops))
+
+        self.sim._schedule(self.sim.now + ms / 2.0, apply)
+        self.sim._schedule(self.sim.now + ms, respond)
+        return done
+
+    def _flush_single(self, op: _BatchOp):
+        op.done = self.sim.event()
+        self._flush(op.partition, [op])
+        return op.done
+
     def log_once(self, partition: str, txn: str, state: Vote, writer: str = "",
                  forward_to: Optional[str] = None, on_forward=None):
+        if self._ingress is not None:
+            return self._ingress.submit(
+                _BatchOp("log_once", partition, txn, state, writer,
+                         fwd=on_forward))
         ms = self.model.sample(self.rng, self.model.conditional_write_ms)
         ev = self._op(ms, lambda: self.store.log_once(partition, txn, state, writer))
         if on_forward is not None:
@@ -318,12 +513,17 @@ class SimStorage:
         return ev
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
+        if self._ingress is not None:
+            return self._ingress.submit(
+                _BatchOp("log", partition, txn, state, writer))
         ms = self.model.sample(self.rng, self.model.plain_write_ms)
         return self._op(ms, lambda: self.store.log(partition, txn, state, writer))
 
     def read_state(self, partition: str, txn: str, writer: str = ""):
         # `writer` (the calling node) is unused here but part of the storage
         # API: the replicated store derives the caller's region from it.
+        # Reads bypass the group-commit lanes (they don't hit the serial
+        # log device).
         ms = self.model.sample(self.rng, self.model.read_ms)
         return self._op(ms, lambda: self.store.read_state(partition, txn))
 
@@ -333,12 +533,15 @@ class SimStorage:
 
         One request (saves per-write round trips vs 2PC's sequential
         prepare-then-decision) but the payload carries every participant's
-        redo records, so service time grows with the batch size.
+        redo records, so service time grows with the batch size — the exact
+        amortization the ingress group-commit lanes reuse, so this is now
+        just a pre-formed single-op batch submitted to the same flush path.
         """
-        mean = self.model.plain_write_ms * (
-            1.0 + self.model.batch_size_factor * max(0, n_records - 1))
-        ms = self.model.sample(self.rng, mean)
-        return self._op(ms, lambda: self.store.log(partition, txn, state, writer))
+        op = _BatchOp("log", partition, txn, state, writer,
+                      n_records=n_records)
+        if self._ingress is not None:
+            return self._ingress.submit(op)
+        return self._flush_single(op)
 
 
 # --------------------------------------------------------------------------
@@ -670,6 +873,33 @@ class _Forward:
         self.scheduled = True
         sim._schedule(sim.now + delay_ms, lambda: self.deliver_now(value))
 
+    @staticmethod
+    def deliver_group(pairs) -> None:
+        """Deliver many forwards arriving together (one batched flush's
+        push toward a region): forwards whose callback exposes a transport
+        payload (``protocols.base.VoteForward``) and share a destination
+        node ride ONE ``Transport.deliver_many`` message; anything else
+        falls back to individual delivery."""
+        by_dst: Dict[Tuple, List] = {}
+        for fwd, value in pairs:
+            if fwd.fired:
+                continue
+            cb = fwd._deliver
+            transport = getattr(cb, "transport", None)
+            if transport is None or not hasattr(cb, "payload"):
+                fwd.deliver_now(value)
+            else:
+                key = (id(transport), cb.dst)
+                if key not in by_dst:
+                    by_dst[key] = (transport, [])
+                by_dst[key][1].append((fwd, value))
+        for transport, group in by_dst.values():
+            items = []
+            for fwd, value in group:
+                fwd.fired = True
+                items.append(fwd._deliver.payload(value))
+            transport.deliver_many(group[0][0]._deliver.dst, items)
+
 
 class ReplicatedSimStorage:
     """Quorum-replicated storage service inside the discrete-event sim.
@@ -699,7 +929,8 @@ class ReplicatedSimStorage:
                  replica_regions: Optional[Sequence[str]] = None,
                  placement: Optional[Mapping[str, str]] = None,
                  mode: str = "leader",
-                 op_timeout_ms: Optional[float] = None) -> None:
+                 op_timeout_ms: Optional[float] = None,
+                 batch: Optional[BatchConfig] = None) -> None:
         assert mode in ("leader", "coloc")
         self.sim = sim
         self.model = model
@@ -720,6 +951,12 @@ class ReplicatedSimStorage:
         self._pids = itertools.count(1)
         self._gens: Dict[Tuple[str, str], int] = {}
         self.requests = 0
+        self.round_trips = 0           # quorum scatter rounds issued
+        self.forward_batches = 0       # coalesced leader→coordinator pushes
+        self.batch = batch or BatchConfig()
+        self._ingress = (GroupCommitIngress(sim, self.batch,
+                                            self._flush_batch)
+                         if self.batch.active else None)
         self.op_timeout_ms = op_timeout_ms or (
             3.0 * self.topology.max_rtt_ms
             + 12.0 * model.conditional_write_ms + 8.0)
@@ -754,12 +991,20 @@ class ReplicatedSimStorage:
         all replicas answered, or ``op_timeout_ms`` elapsed.  A replica dead
         at apply time silently drops the request.
 
-        ``also=(region, cb)`` models acceptor-side forwarding: each replica
-        that applies the request ALSO sends its result toward ``region``,
-        where ``cb(i, result)`` runs at arrival time (paxos-commit's
-        "acceptors forward to the coordinator")."""
+        ``also`` models acceptor-side forwarding: each replica that applies
+        the request ALSO sends its result toward a forward region, where
+        ``cb(i, result)`` runs at arrival time (paxos-commit's "acceptors
+        forward to the coordinator").  It is one ``(region, cb)`` pair or a
+        list of them; pairs sharing a region ride ONE message per replica
+        (a batch flush forwards many slots' votes in a single push)."""
         done = self.sim.event()
         acc = {"resps": [], "count": 0}
+        self.round_trips += 1
+        fwd_by_region: Dict[str, List] = {}
+        if also is not None:
+            pairs = also if isinstance(also, list) else [also]
+            for fwd_region, cb in pairs:
+                fwd_by_region.setdefault(fwd_region, []).append(cb)
 
         def finish_if(ready: bool) -> None:
             if not done.triggered and ready:
@@ -783,12 +1028,13 @@ class ReplicatedSimStorage:
                               or acc["count"] >= self.n)
 
                 self.sim._schedule(self.sim.now + net, respond)
-                if also is not None:
-                    fwd_region, cb = also
+                for fwd_region, cbs in fwd_by_region.items():
                     fwd_net = self.topology.rtt_ms(
                         self.replica_regions[i], fwd_region) / 2.0
-                    self.sim._schedule(self.sim.now + fwd_net,
-                                       lambda i=i, val=val: cb(i, val))
+                    self.sim._schedule(
+                        self.sim.now + fwd_net,
+                        lambda i=i, val=val, cbs=cbs: [cb(i, val)
+                                                       for cb in cbs])
 
             self.sim._schedule(self.sim.now + net + service, apply)
         self.sim._schedule(self.sim.now + self.op_timeout_ms,
@@ -944,6 +1190,176 @@ class ReplicatedSimStorage:
                            self.model.plain_write_ms, self_idx)
             return value
 
+    # -- group commit: one accept round carrying many (txn, slot) values ---
+    def _batchable(self, partition: str, writer: str) -> bool:
+        """Only slot-owner fast-path ops coalesce: the batch is ONE owner-
+        ballot accept round, so every op in it must hold the slot's implicit
+        phase-1 promise.  In coloc mode that is the partition owner's own
+        ops; in leader mode everything funnels through the initial leader
+        (a post-failover leader pays full prepare+accept per op, unbatched,
+        exactly like the unbatched path)."""
+        if self._ingress is None:
+            return False
+        if self.mode == "coloc":
+            return bool(writer) and writer == partition
+        return self._leader_idx() == 0
+
+    def _submit_batched(self, op: _BatchOp):
+        """Wrap lane submission with the caller's network legs (leader mode)
+        and the forward safety net, mirroring ``_via_leader``."""
+        def gen():
+            if self.mode == "leader":
+                src = self._region_of(op.writer)
+                lr = self.replica_regions[0]
+                yield self.sim.timeout(self.topology.rtt_ms(src, lr) / 2.0)
+                result = yield self._ingress.submit(op)
+                yield self.sim.timeout(self.topology.rtt_ms(lr, src) / 2.0)
+            else:
+                result = yield self._ingress.submit(op)
+            if (op.fwd is not None and not op.fwd.fired
+                    and not op.fwd.scheduled):
+                # Raced / fallback paths: the caller's reply doubles as the
+                # forward source, like the unbatched short-circuit.
+                op.fwd.deliver_now(result)
+            return result
+
+        return self.sim.process(gen())
+
+    def _flush_batch(self, partition: str, ops: List[_BatchOp]):
+        """ONE quorum round trip for the whole batch: a single scatter whose
+        payload carries every op — owner-ballot accepts for the log_once
+        slots, generation writes for the plain logs — charged one base
+        service time plus ``batch_size_factor`` growth.  Ops apply in
+        arrival order on every replica, so intra-batch first-writer-wins
+        races resolve identically to back-to-back unbatched ops.  An op
+        that loses its accept round (a concurrent unbatched proposer — e.g.
+        a termination CAS — promoted the slot's ballot) falls back to the
+        full prepare+accept proposer, which adopts whatever value won."""
+        def gen():
+            if self.mode == "coloc":
+                src, self_idx = self._region_of(partition), None
+            else:
+                li = self._leader_idx()
+                if li != 0:
+                    # Initial leader gone between submit and flush: batch
+                    # guarantees are off, resolve each op individually.
+                    for op in ops:
+                        self.sim.process(self._finish_fallback(op))
+                    return 0
+                src, self_idx = self.replica_regions[li], li
+            for op in ops:
+                if op.kind == "log":
+                    g = self._gens.get(op.key, 1) + 1
+                    self._gens[op.key] = g
+                    op.gen = g
+            base = max(self.model.conditional_write_ms
+                       if op.kind == "log_once"
+                       else self.model.plain_write_ms for op in ops)
+            mean = self.model.batched_write_ms(
+                sum(op.n_records for op in ops), base)
+
+            def apply_all(r: ReplicaLog, i: int):
+                out = []
+                for op in ops:
+                    if op.kind == "log_once":
+                        out.append(r.accept(op.key, OWNER_BALLOT, op.state))
+                    else:
+                        out.append(r.write(op.key, op.state, op.gen,
+                                           op.writer))
+                return out
+
+            def op_satisfied(idx: int, resps) -> bool:
+                if ops[idx].kind == "log_once":
+                    return sum(1 for _, vals in resps
+                               if vals[idx]) >= self.quorum
+                return len(resps) >= self.quorum
+
+            resps = yield self._scatter(
+                src, apply_all, mean,
+                lambda rs: all(op_satisfied(i, rs)
+                               for i in range(len(ops))),
+                self_idx, also=self._batch_acceptor_forwards(ops))
+
+            fwd_groups: Dict[str, List[_BatchOp]] = {}
+            for idx, op in enumerate(ops):
+                if not op_satisfied(idx, resps):
+                    self.sim.process(self._finish_fallback(op))
+                    continue
+                if op.kind == "log_once":
+                    self._cast(src,
+                               lambda r, i, op=op: r.learn(op.key, op.state,
+                                                           op.writer),
+                               self.model.plain_write_ms, self_idx)
+                    self._gens[op.key] = max(self._gens.get(op.key, 1), 1)
+                op.result = op.state
+                op.done.trigger(op.result)
+                if (self.mode == "leader" and op.fwd is not None
+                        and not op.fwd.fired):
+                    fwd_groups.setdefault(op.fwd.region, []).append(op)
+            # Coalesced storage→coordinator delivery: all forwarded votes
+            # bound for one region leave the leader as ONE push, and those
+            # sharing a destination node land as ONE deliver_many message.
+            for region, group in fwd_groups.items():
+                delay = self.topology.rtt_ms(src, region) / 2.0
+                for op in group:
+                    op.fwd.scheduled = True
+                self.forward_batches += 1
+                self.sim._schedule(
+                    self.sim.now + delay,
+                    lambda group=group: _Forward.deliver_group(
+                        [(op.fwd, op.result) for op in group]))
+            return len(ops)
+
+        return self.sim.process(gen())
+
+    def _batch_acceptor_forwards(self, ops: List[_BatchOp]):
+        """Per-op acceptor forwarding for a batched accept round (coloc /
+        paxos-commit): reuse the per-accept quorum counting of
+        ``_acceptor_forward``, adapted to pick this op's ack out of the
+        replica's batch response.  ``_scatter`` groups the pairs by region,
+        so one replica pushes all its acks toward a coordinator region in a
+        single message."""
+        if self.mode != "coloc":
+            return None
+        pairs = []
+        for idx, op in enumerate(ops):
+            if op.kind == "log_once" and op.fwd is not None:
+                region, cb = self._acceptor_forward(op.fwd, op.state)
+                pairs.append((region,
+                              lambda i, vals, idx=idx, cb=cb: cb(i, vals[idx])))
+        return pairs or None
+
+    def _finish_fallback(self, op: _BatchOp):
+        """Resolve one op that could not ride (or lost) the batched fast
+        path: the full prepare+accept proposer, which discovers and adopts
+        any value a competing proposer already fixed for the slot."""
+        if op.kind == "log_once":
+            while True:
+                if self.mode == "coloc":
+                    src, self_idx = self._region_of(op.writer), None
+                else:
+                    li = self._leader_idx()
+                    if li is None:
+                        yield self.sim.timeout(self.op_timeout_ms)
+                        continue
+                    src, self_idx = self.replica_regions[li], li
+                result = yield from self._quorum_log_once(
+                    src, self_idx, False, op.key, op.state, op.writer,
+                    forward=op.fwd)
+                break
+        else:
+            if self.mode == "coloc":
+                src, self_idx = self._region_of(op.writer), None
+            else:
+                li = self._leader_idx() or 0
+                src, self_idx = self.replica_regions[li], li
+            result = yield from self._quorum_write(
+                src, self_idx, op.key, op.state, op.writer,
+                self.model.plain_write_ms)
+        op.result = result
+        op.done.trigger(result)
+        return result
+
     # -- public SimStorage-compatible API ----------------------------------
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "", forward_to: Optional[str] = None,
@@ -957,6 +1373,9 @@ class ReplicatedSimStorage:
         key = (partition, txn)
         fwd = (None if on_forward is None
                else _Forward(self._region_of(forward_to), on_forward))
+        if self._batchable(partition, writer):
+            return self._submit_batched(
+                _BatchOp("log_once", partition, txn, state, writer, fwd=fwd))
 
         def gen():
             if self.mode == "coloc":
@@ -978,9 +1397,13 @@ class ReplicatedSimStorage:
         return self.sim.process(gen())
 
     def _log_event(self, partition: str, txn: str, state: Vote, writer: str,
-                   mean_ms: float):
+                   mean_ms: float, n_records: int = 1):
         self.requests += 1
         key = (partition, txn)
+        if self._batchable(partition, writer):
+            return self._submit_batched(
+                _BatchOp("log", partition, txn, state, writer,
+                         n_records=n_records))
 
         def gen():
             if self.mode == "coloc":
@@ -1001,9 +1424,12 @@ class ReplicatedSimStorage:
 
     def log_batch(self, partition: str, txn: str, state: Vote,
                   n_records: int, writer: str = ""):
-        mean = self.model.plain_write_ms * (
-            1.0 + self.model.batch_size_factor * max(0, n_records - 1))
-        return self._log_event(partition, txn, state, writer, mean)
+        # §5.6 batched record: a pre-formed n_records batch through the same
+        # amortization model (and, when active, the same ingress lanes) as
+        # storage-side group commit.
+        return self._log_event(partition, txn, state, writer,
+                               self.model.batched_write_ms(n_records),
+                               n_records=n_records)
 
     def read_state(self, partition: str, txn: str, writer: str = ""):
         self.requests += 1
@@ -1031,3 +1457,129 @@ class ReplicatedSimStorage:
             if v is not None:
                 out[k] = v
         return out
+
+
+# --------------------------------------------------------------------------
+# Threaded group commit: BatchingStore decorator
+# --------------------------------------------------------------------------
+class _ThreadBatchOp:
+    __slots__ = ("kind", "args", "event", "result", "error", "promoted")
+
+    def __init__(self, kind: str, args: tuple):
+        self.kind = kind
+        self.args = args
+        self.event = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self.promoted = False          # woken to LEAD, not with a result
+
+
+class _ThreadLane:
+    __slots__ = ("lock", "pending", "leader_active")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.pending: List[_ThreadBatchOp] = []
+        self.leader_active = False
+
+
+class BatchingStore:
+    """Group-commit decorator for the threaded stores (``MemoryStore`` /
+    ``FileStore`` / ``ReplicatedStore``).
+
+    Same blocking three-operation surface as the wrapped store.  Concurrent
+    ``log_once`` / ``log`` calls targeting one partition coalesce: the first
+    caller becomes the batch *leader*, sleeps ``window_s`` collecting
+    followers, then applies every queued op against the inner store in
+    arrival order — one leader round trip (``round_trips``) per batch —
+    and hands each follower its own result (or exception, e.g.
+    ``QuorumUnavailable``).  Arrival order decides first-writer-wins per
+    slot exactly as unbatched calls would; reads pass straight through.
+
+    ``window_s=0`` still batches whatever queued while the previous leader
+    was executing (piggyback group commit), which is the recommended
+    deployment: zero added latency when idle, amortization under load.
+    """
+
+    def __init__(self, inner, window_s: float = 0.0,
+                 max_batch: int = 64) -> None:
+        assert max_batch >= 1
+        self.inner = inner
+        self.window_s = window_s
+        self.max_batch = max_batch
+        self._lanes: Dict[str, _ThreadLane] = {}
+        self._lanes_lock = threading.Lock()
+        self.round_trips = 0
+        self.batched_ops = 0
+
+    # Everything not intercepted (read_state, writer_of, snapshot, log_data,
+    # put_data/get_data, fail_replica, cas_attempts, ...) delegates.
+    def __getattr__(self, name: str):
+        return getattr(self.inner, name)
+
+    def _lane(self, partition: str) -> _ThreadLane:
+        with self._lanes_lock:
+            lane = self._lanes.get(partition)
+            if lane is None:
+                lane = self._lanes[partition] = _ThreadLane()
+            return lane
+
+    def _apply(self, op: _ThreadBatchOp) -> None:
+        try:
+            fn = getattr(self.inner, op.kind)
+            op.result = fn(*op.args)
+        except BaseException as e:          # surfaced in the caller's thread
+            op.error = e
+
+    def _submit(self, partition: str, op: _ThreadBatchOp) -> Vote:
+        lane = self._lane(partition)
+        with lane.lock:
+            lane.pending.append(op)
+            lead = not lane.leader_active
+            if lead:
+                lane.leader_active = True
+        if not lead:
+            op.event.wait()
+            if op.promoted:
+                # The previous leader finished its round with ops (ours
+                # included) still queued and handed leadership over, so no
+                # caller ever leads more than one round (a leader trapped
+                # draining other threads' ops would see unbounded latency).
+                lead = True
+        if lead:
+            # ONE leader round: our op was queued before we took
+            # leadership, so it is always in this batch.
+            if self.window_s > 0:
+                time.sleep(self.window_s)
+            with lane.lock:
+                batch = lane.pending[:self.max_batch]
+                lane.pending = lane.pending[self.max_batch:]
+            # One round trip for the whole batch.
+            self.round_trips += 1
+            self.batched_ops += len(batch)
+            for b in batch:
+                self._apply(b)
+            with lane.lock:
+                nxt = lane.pending[0] if lane.pending else None
+                if nxt is None:
+                    lane.leader_active = False
+                else:
+                    nxt.promoted = True
+            for b in batch:
+                if b is not op:
+                    b.event.set()
+            if nxt is not None:
+                nxt.event.set()
+        if op.error is not None:
+            raise op.error
+        return op.result
+
+    def log_once(self, partition: str, txn: str, state: Vote,
+                 writer: str = "") -> Vote:
+        return self._submit(partition, _ThreadBatchOp(
+            "log_once", (partition, txn, state, writer)))
+
+    def log(self, partition: str, txn: str, state: Vote,
+            writer: str = "") -> Vote:
+        return self._submit(partition, _ThreadBatchOp(
+            "log", (partition, txn, state, writer)))

@@ -83,7 +83,8 @@ SIMULATED_RTT_ROWS = {
 def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
                                n_participants: int = 2,
                                n_replicas: int = 3,
-                               seed: int = 0) -> float:
+                               seed: int = 0,
+                               batch_window_ms: float = 0.0) -> float:
     """Measured counterpart of ``predicted_caller_latency_ms``.
 
     Runs ONE commit on the discrete-event sim against a quorum-replicated
@@ -91,9 +92,15 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
     compute↔storage, inter-replica) costs ``paxos_rtt_ms`` and service
     times are ZERO — so the result lands exactly on Table 3's RTT
     multiples (validated with equality, not a tolerance, in the tests).
+
+    ``batch_window_ms`` threads the storage-ingress group-commit window
+    through: 0 (the default) is the exact passthrough the equality check
+    runs against; a positive window exercises the batched fast path (adds
+    up to one window of queueing delay to each logged vote).
     """
     from .sim import Sim
-    from .storage import LatencyModel, RegionTopology, ReplicatedSimStorage
+    from .storage import (BatchConfig, LatencyModel, RegionTopology,
+                          ReplicatedSimStorage)
 
     if protocol not in SIMULATED_RTT_ROWS:
         raise ValueError(f"no simulated deployment for {protocol!r}; "
@@ -103,8 +110,10 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
     model = LatencyModel("paxos-null", conditional_write_ms=0.0,
                          plain_write_ms=0.0, read_ms=0.0, jitter=0.0)
     sim = Sim()
-    storage = ReplicatedSimStorage(sim, model, n_replicas=n_replicas,
-                                   seed=seed, topology=topo, mode=mode)
+    storage = ReplicatedSimStorage(
+        sim, model, n_replicas=n_replicas, seed=seed, topology=topo,
+        mode=mode, batch=BatchConfig(window_ms=batch_window_ms,
+                                     serial=batch_window_ms > 0))
     nodes = ["c"] + [f"p{i}" for i in range(n_participants)]
     tmo = 50.0 * paxos_rtt_ms
     cfg = ProtocolConfig(protocol=proto, topology=topo,

@@ -18,8 +18,8 @@ from ..core.protocol import Cluster, ProtocolConfig
 from ..core.protocols import get_protocol
 from ..core.sim import Sim
 from ..core.state import Decision, TxnSpec, Vote
-from ..core.storage import (COMPUTE_RTT_MS, LatencyModel, RegionTopology,
-                            ReplicatedSimStorage, SimStorage)
+from ..core.storage import (COMPUTE_RTT_MS, BatchConfig, LatencyModel,
+                            RegionTopology, ReplicatedSimStorage, SimStorage)
 from .store import LockMode, LockTable
 from .workload import Txn
 
@@ -49,6 +49,16 @@ class BenchConfig:
     # Restrict closed-loop clients to these nodes (geo: home-region
     # coordinators only); None = clients on every node.
     coordinator_nodes: Optional[List[str]] = None
+    # --- storage-side group commit (batching) ------------------------------
+    # window=0 + serial=False (the default) is an exact passthrough: every
+    # request keeps its own concurrent round trip, bit-identical to the
+    # pre-batching simulator.  storage_serial=True models the serial log
+    # device per partition (one write round trip in flight at a time);
+    # batch_window_ms/batch_max control how aggressively queued requests
+    # coalesce into one round trip (see core.storage.BatchConfig).
+    batch_window_ms: float = 0.0
+    batch_max: int = 64
+    storage_serial: bool = False
 
 
 @dataclass
@@ -64,6 +74,15 @@ class BenchResult:
     prepare_ms: List[float] = field(default_factory=list)
     commit_ms: List[float] = field(default_factory=list)
     horizon_ms: float = 0.0
+    # Storage-side accounting (group-commit amortization).  requests counts
+    # logical API calls; round_trips counts wire rounds paid — one per op
+    # on the single SimStorage (== requests with batching off), one per
+    # quorum scatter on ReplicatedSimStorage (reads and multi-phase
+    # proposals pay several, so it can exceed requests there).  Compare
+    # round_trips across batch modes of the SAME config, not across
+    # storage deployments.
+    storage_requests: int = 0
+    storage_round_trips: int = 0
 
     @staticmethod
     def _avg(xs: List[float]) -> float:
@@ -101,24 +120,29 @@ def run_bench(workload_factory, model: LatencyModel,
     nodes = [f"n{i}" for i in range(cfg.n_nodes)]
     placement = dict(cfg.placement) if cfg.placement else (
         cfg.topology.place_round_robin(nodes) if cfg.topology else {})
+    batch = BatchConfig(window_ms=cfg.batch_window_ms,
+                        max_batch=cfg.batch_max, serial=cfg.storage_serial)
     if cfg.replication > 1 or cfg.topology is not None:
         mode = (cfg.storage_mode or proto_cls.preferred_storage_mode
                 or "leader")
         storage = ReplicatedSimStorage(
             sim, model, n_replicas=cfg.replication, seed=cfg.seed,
             topology=cfg.topology, replica_regions=cfg.replica_regions,
-            placement=placement, mode=mode)
+            placement=placement, mode=mode, batch=batch)
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
     else:
-        storage = SimStorage(sim, model, seed=cfg.seed)
+        storage = SimStorage(sim, model, seed=cfg.seed, batch=batch)
     # Timeouts must sit above the storage service's tail latency, or healthy
     # transactions get spuriously terminated (the paper's deployments tune
     # timeouts per service; we scale with the model's write latency, and in
     # geo deployments with the worst link RTT times the quorum round count).
     topo_rtt = cfg.topology.max_rtt_ms if cfg.topology else 0.0
+    # Group-commit deployments wait out the batch window (and, with a serial
+    # log device, some queueing) before a write returns: scale timeouts with
+    # the window so a healthy batched write is not spuriously terminated.
     tmo = max(25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
-              + 8.0 * topo_rtt)
+              + 8.0 * topo_rtt + 8.0 * cfg.batch_window_ms)
     pcfg = ProtocolConfig(protocol=cfg.protocol,
                           rtt_ms=cfg.rtt_ms, elr=cfg.elr,
                           vote_timeout_ms=tmo, decision_timeout_ms=tmo,
@@ -217,6 +241,8 @@ def run_bench(workload_factory, model: LatencyModel,
         for c in range(cfg.threads_per_node):
             sim.process(client(n, c))
     sim.run(until=cfg.horizon_ms + 500.0)
+    res.storage_requests = storage.requests
+    res.storage_round_trips = storage.round_trips
     return res
 
 

@@ -67,7 +67,8 @@ class Txn:
 class YCSBWorkload:
     def __init__(self, nodes: Sequence[str], theta: float = 0.0,
                  accesses_per_txn: int = 16, read_ratio: float = 0.5,
-                 keys_per_partition: int = 10_000, seed: int = 0):
+                 keys_per_partition: int = 10_000, seed: int = 0,
+                 partition_theta: float = 0.0):
         self.nodes = list(nodes)
         self.theta = theta
         self.n_access = accesses_per_txn
@@ -75,6 +76,11 @@ class YCSBWorkload:
         self.rng = random.Random(seed)
         self.keys = keys_per_partition
         self._zipf = zipf_sampler(keys_per_partition, theta, self.rng)
+        # Hot-partition skew (group-commit contention benches): partitions
+        # drawn zipfian(partition_theta) instead of uniformly — θ=0 keeps
+        # the original uniform draw, bit-identically.
+        self.partition_theta = partition_theta
+        self._pzipf = zipf_sampler(len(self.nodes), partition_theta, self.rng)
         self._seq = 0
 
     def next_txn(self, coordinator: str) -> Txn:
@@ -82,7 +88,7 @@ class YCSBWorkload:
         accesses: List[Access] = []
         used = set()
         while len(accesses) < self.n_access:
-            node = self.nodes[self.rng.randrange(len(self.nodes))]
+            node = self.nodes[self._pzipf()]
             key = f"k{self._zipf()}"
             if (node, key) in used:
                 continue
