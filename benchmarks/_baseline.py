@@ -1,0 +1,97 @@
+"""Shared throughput-baseline gate for the standalone sweep benches.
+
+``benchmarks.contention`` and ``benchmarks.failover_recovery`` both pin
+quick-mode committed-txn throughput per configuration in a JSON file at
+the repo root and fail CI when any tracked value regresses more than
+``REGRESSION_TOLERANCE``.  The sweep itself differs per bench; the gate
+(tracking, pinning, checking, CLI) lives here once.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+Row = Tuple[str, float, str]
+
+REGRESSION_TOLERANCE = 0.15     # CI fails below 85% of baseline throughput
+
+
+def tracked(rows: List[Row]) -> Dict[str, float]:
+    return {name: value for name, value, _ in rows
+            if name.endswith("/tput_tps")}
+
+
+def write_baseline(rows: List[Row], path: str, bench: str) -> None:
+    payload = {
+        "schema": 1,
+        "bench": bench,
+        "note": "quick-mode committed-txn throughput per configuration; "
+                "CI fails when a tracked value drops below "
+                f"{1 - REGRESSION_TOLERANCE:.0%} of this baseline "
+                "(deterministic sim: genuine drift means a code change).",
+        "tput_tps": tracked(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_baseline(rows: List[Row], path: str,
+                   extra_check: Optional[Callable[[List[Row]], bool]] = None
+                   ) -> bool:
+    with open(path) as f:
+        baseline = json.load(f)["tput_tps"]
+    got = tracked(rows)
+    ok = True
+    for name, want in sorted(baseline.items()):
+        have = got.get(name)
+        if have is None:
+            print(f"# baseline MISSING from sweep: {name}", file=sys.stderr)
+            ok = False
+            continue
+        floor = want * (1.0 - REGRESSION_TOLERANCE)
+        verdict = "ok" if have >= floor else "REGRESSION"
+        if have < floor:
+            ok = False
+        print(f"# baseline {verdict}: {name} {have:.1f} vs {want:.1f} "
+              f"(floor {floor:.1f})", file=sys.stderr)
+    if extra_check is not None:
+        ok = extra_check(rows) and ok
+    return ok
+
+
+def gate_main(description: str, sweep: Callable[[bool], List[Row]],
+              baseline_path: str, bench_name: str, error_msg: str,
+              extra_check: Optional[Callable[[List[Row]], bool]] = None
+              ) -> None:
+    """Shared CLI: print the sweep CSV, optionally pin or gate it."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid / issue windows (CI)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"pin current quick-mode throughput "
+                         f"to {os.path.basename(baseline_path)}")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail (exit 1) on >15%% throughput regression "
+                         "against the pinned baseline")
+    ap.add_argument("--baseline", default=baseline_path)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    rows = sweep(args.quick or args.write_baseline or args.check_baseline)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.4f},{derived}")
+    print(f"# sweep took {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.write_baseline:
+        write_baseline(rows, args.baseline, bench_name)
+        print(f"# baseline written to {args.baseline}", file=sys.stderr)
+    if args.check_baseline:
+        if not check_baseline(rows, args.baseline, extra_check):
+            print(f"::error::{error_msg}", file=sys.stderr)
+            sys.exit(1)

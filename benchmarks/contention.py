@@ -12,6 +12,9 @@ Three batch modes bracket the design space:
                when idle.
   window2ms  – a 2 ms formation window on top: deeper batches, bounded
                added latency.
+  windowauto – load-proportional window (real log-daemon style): an idle
+               lane never delays, a busy lane waits up to the 4 ms clamp
+               to fill the batch.
 
 Emits ``name,value,derived`` CSV rows (latency AND throughput per config,
 plus batched-vs-unbatched speedups and storage round-trip counts) so one
@@ -28,27 +31,25 @@ non-zero when any tracked throughput regresses more than 15%.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
-import sys
-import time
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.core import AZURE_REDIS
 from repro.txn import BenchConfig, YCSBWorkload, run_bench
 
-Row = Tuple[str, float, str]
+from benchmarks._baseline import (REGRESSION_TOLERANCE, Row, check_baseline,
+                                  gate_main, write_baseline)
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_contention.json")
-REGRESSION_TOLERANCE = 0.15     # CI fails below 85% of baseline throughput
 
 BATCH_MODES = {
     "nobatch": dict(storage_serial=True, batch_max=1),
     "piggyback": dict(storage_serial=True, batch_max=64),
     "window2ms": dict(storage_serial=True, batch_max=64,
                       batch_window_ms=2.0),
+    "windowauto": dict(storage_serial=True, batch_max=64,
+                       batch_window_ms="auto"),
 }
 
 
@@ -96,7 +97,7 @@ def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
                     rows.append((f"{key}/tput_tps", r.throughput_tps, derived))
                     rows.append((f"{key}/avg_ms", r.avg_latency_ms,
                                  f"p99={r.p99_latency_ms:.2f}"))
-                for mode in ("piggyback", "window2ms"):
+                for mode in ("piggyback", "window2ms", "windowauto"):
                     base = max(tput[proto]["nobatch"], 1e-9)
                     rows.append(
                         (f"contention/r{replication}/{proto}/{mode}/"
@@ -107,77 +108,15 @@ def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
-# Baseline gate (CI)
+# Baseline gate (CI) — shared machinery in benchmarks/_baseline.py
 # ---------------------------------------------------------------------------
-def _tracked(rows: List[Row]) -> Dict[str, float]:
-    return {name: value for name, value, _ in rows
-            if name.endswith("/tput_tps")}
-
-
-def write_baseline(rows: List[Row], path: str = BASELINE_PATH) -> None:
-    payload = {
-        "schema": 1,
-        "bench": "benchmarks.contention --quick",
-        "note": "quick-mode committed-txn throughput per configuration; "
-                "CI fails when a tracked value drops below "
-                f"{1 - REGRESSION_TOLERANCE:.0%} of this baseline "
-                "(deterministic sim: genuine drift means a code change).",
-        "tput_tps": _tracked(rows),
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-
-
-def check_baseline(rows: List[Row], path: str = BASELINE_PATH) -> bool:
-    with open(path) as f:
-        baseline = json.load(f)["tput_tps"]
-    got = _tracked(rows)
-    ok = True
-    for name, want in sorted(baseline.items()):
-        have = got.get(name)
-        if have is None:
-            print(f"# baseline MISSING from sweep: {name}", file=sys.stderr)
-            ok = False
-            continue
-        floor = want * (1.0 - REGRESSION_TOLERANCE)
-        verdict = "ok" if have >= floor else "REGRESSION"
-        if have < floor:
-            ok = False
-        print(f"# baseline {verdict}: {name} {have:.1f} vs {want:.1f} "
-              f"(floor {floor:.1f})", file=sys.stderr)
-    return ok
-
-
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced grid / issue windows (CI, <60s)")
-    ap.add_argument("--write-baseline", action="store_true",
-                    help=f"pin current quick-mode throughput "
-                         f"to {os.path.basename(BASELINE_PATH)}")
-    ap.add_argument("--check-baseline", action="store_true",
-                    help="fail (exit 1) on >15%% throughput regression "
-                         "against the pinned baseline")
-    ap.add_argument("--baseline", default=BASELINE_PATH)
-    args = ap.parse_args()
-
-    t0 = time.time()
-    rows = sweep(quick=args.quick or args.write_baseline
-                 or args.check_baseline)
-    print("name,value,derived")
-    for name, value, derived in rows:
-        print(f"{name},{value:.4f},{derived}")
-    print(f"# sweep took {time.time() - t0:.1f}s", file=sys.stderr)
-
-    if args.write_baseline:
-        write_baseline(rows, args.baseline)
-        print(f"# baseline written to {args.baseline}", file=sys.stderr)
-    if args.check_baseline:
-        if not check_baseline(rows, args.baseline):
-            print("::error::contention throughput regressed >15% "
-                  "against BENCH_contention.json", file=sys.stderr)
-            sys.exit(1)
+    gate_main(description=__doc__.splitlines()[0],
+              sweep=lambda quick: sweep(quick=quick),
+              baseline_path=BASELINE_PATH,
+              bench_name="benchmarks.contention --quick",
+              error_msg="contention throughput regressed >15% "
+                        "against BENCH_contention.json")
 
 
 if __name__ == "__main__":

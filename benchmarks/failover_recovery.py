@@ -1,0 +1,131 @@
+"""Failover recovery: leader leases restore the batched fast path.
+
+Kills the initial storage leader (replica 0) against an R=3 replicated,
+group-committed (serial piggyback) deployment and measures how leadership
+leases recover the phase-1-free fast path:
+
+  prefail   – no failure: the initial leader's implicit epoch-1 lease.
+  postfail  – replica 0 down from t=0: the whole run is post-failover
+              steady state on the epoch-2+ lease (one bulk prepare round
+              per epoch, then owner-ballot single accepts, batched).
+  midrun    – replica 0 dies a third of the way in: time-to-fast-path is
+              when the new leader's first lease acquisition lands.
+
+The headline claim (gated in ``tests/test_leases.py`` and via the pinned
+baseline here): post-failover steady-state committed-txn throughput stays
+within 1.2x of the pre-failover fast path, instead of the unbounded
+per-op 2-RTT prepare+accept fallback this deployment used to pay.
+
+Both sides of the comparison run with the same explicit protocol timeout
+(``TIMEOUT_MS``): losing a replica costs a replica's worth of tail
+absorption, and a timeout tuned to the no-failure p99 self-amplifies into
+termination storms — the paper's deployments tune timeouts per service.
+
+Standalone entry point with a CI regression gate::
+
+    python -m benchmarks.failover_recovery --quick --check-baseline
+    python -m benchmarks.failover_recovery --quick --write-baseline
+
+The baseline (``BENCH_failover.json`` at the repo root) pins quick-mode
+committed-txn throughput per configuration; ``--check-baseline`` exits
+non-zero when any tracked throughput regresses more than 15%.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List
+
+from repro.core import AZURE_REDIS
+from repro.txn import BenchConfig, YCSBWorkload, run_bench
+
+from benchmarks._baseline import Row, gate_main
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_failover.json")
+RECOVERY_RATIO_BOUND = 1.2      # prefail tput / postfail tput acceptance
+TIMEOUT_MS = 60.0               # above the degraded post-failover p99
+
+
+def _wl(nodes, seed):
+    return YCSBWorkload(nodes, accesses_per_txn=4, partition_theta=0.9,
+                        keys_per_partition=10_000, seed=seed)
+
+
+def run_one(proto: str, scenario: str, horizon_ms: float,
+            replication: int = 3, seed: int = 3):
+    fail_at = {"prefail": None, "postfail": 0.0,
+               "midrun": horizon_ms / 3.0}[scenario]
+    cfg = BenchConfig(protocol=proto, n_nodes=4, threads_per_node=8,
+                      horizon_ms=horizon_ms, replication=replication,
+                      seed=seed, storage_serial=True, batch_max=64,
+                      timeout_ms=TIMEOUT_MS,
+                      replica_failures=(() if fail_at is None
+                                        else ((0, fail_at),)))
+    return run_bench(_wl, AZURE_REDIS, cfg), fail_at
+
+
+def time_to_fast_path_ms(res, fail_at: float) -> float:
+    """Sim time from the leader's death to the first lease acquisition —
+    when fast-path (and batched) service resumes on the new leader."""
+    acquired = [t for (_epoch, _holder, t) in res.lease_history
+                if t >= fail_at]
+    return (acquired[0] - fail_at) if acquired else float("nan")
+
+
+def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
+    protos = ("cornus", "2pc")
+    horizon = 600.0 if quick else 1500.0
+    rows: List[Row] = []
+    for proto in protos:
+        tput: Dict[str, float] = {}
+        for scenario in ("prefail", "postfail", "midrun"):
+            r, fail_at = run_one(proto, scenario, horizon,
+                                 replication=replication)
+            tput[scenario] = r.throughput_tps
+            key = f"failover/r{replication}/{proto}/{scenario}"
+            derived = (f"commits={r.commits} gaveups={r.gaveups} "
+                       f"leases={r.lease_acquisitions} "
+                       f"fast={r.fast_path_ops} fallback={r.fallback_ops}")
+            rows.append((f"{key}/tput_tps", r.throughput_tps, derived))
+            rows.append((f"{key}/avg_ms", r.avg_latency_ms,
+                         f"p99={r.p99_latency_ms:.2f}"))
+            if scenario == "midrun":
+                rows.append((f"{key}/ttfp_ms",
+                             time_to_fast_path_ms(r, fail_at),
+                             "leader death -> first lease acquisition"))
+        ratio = tput["prefail"] / max(tput["postfail"], 1e-9)
+        rows.append((f"failover/r{replication}/{proto}/recovery_ratio",
+                     ratio,
+                     f"prefail/postfail tput; bound {RECOVERY_RATIO_BOUND}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Baseline gate (CI) — shared machinery in benchmarks/_baseline.py
+# ---------------------------------------------------------------------------
+def _check_recovery_ratios(rows: List[Row]) -> bool:
+    ok = True
+    for name, ratio, _ in rows:
+        if not name.endswith("/recovery_ratio"):
+            continue
+        verdict = "ok" if ratio <= RECOVERY_RATIO_BOUND else "REGRESSION"
+        if ratio > RECOVERY_RATIO_BOUND:
+            ok = False
+        print(f"# recovery {verdict}: {name} {ratio:.3f} "
+              f"(bound {RECOVERY_RATIO_BOUND})", file=sys.stderr)
+    return ok
+
+
+def main() -> None:
+    gate_main(description=__doc__.splitlines()[0],
+              sweep=lambda quick: sweep(quick=quick),
+              baseline_path=BASELINE_PATH,
+              bench_name="benchmarks.failover_recovery --quick",
+              error_msg="failover recovery regressed against "
+                        "BENCH_failover.json",
+              extra_check=_check_recovery_ratios)
+
+
+if __name__ == "__main__":
+    main()

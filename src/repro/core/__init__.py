@@ -18,7 +18,7 @@ from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       GroupCommitIngress, LatencyModel, MemoryStore,
                       QuorumUnavailable, RegionTopology, ReplicaLog,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage,
-                      merge_reads)
+                      StoreLease, merge_reads)
 from .protocols import (CommitProtocol, Transport, TxnContext, get_protocol,
                         register, registered_protocols)
 from .protocol import Cluster, ProtocolConfig
@@ -37,6 +37,6 @@ __all__ = [
     "SIMULATED_RTT_ROWS",
     "RegionTopology", "INTRA_ZONE", "CROSS_ZONE", "CROSS_REGION",
     "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
-    "QuorumUnavailable",
+    "QuorumUnavailable", "StoreLease",
     "BatchConfig", "BatchingStore", "GroupCommitIngress",
 ]

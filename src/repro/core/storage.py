@@ -163,6 +163,13 @@ class BatchConfig:
                    in the batch.  0 = flush as soon as the lane is idle
                    ("piggyback" group commit: only requests that arrived
                    while the previous flush was in flight coalesce).
+                   "auto" = load-proportional window, like real log
+                   daemons (PostgreSQL commit_delay / InnoDB group-commit
+                   sync delay): a lane only delays a flush when arrivals
+                   are frequent enough that waiting will coalesce more
+                   records, and the delay is clamped to
+                   [0, ``max_window_ms``]; an idle lane never waits.
+      max_window_ms – clamp for the "auto" window.
       max_batch  – records per flush cap; a full batch flushes immediately.
                    1 = a plain serial queue (no coalescing).
       serial     – enable the per-partition serial lane even at window 0.
@@ -172,13 +179,28 @@ class BatchConfig:
     Table-3 numbers are validated against this passthrough).
     """
 
-    window_ms: float = 0.0
+    window_ms: "float | str" = 0.0
     max_batch: int = 64
     serial: bool = False
+    max_window_ms: float = 4.0
+
+    def __post_init__(self) -> None:
+        if isinstance(self.window_ms, str) and self.window_ms != "auto":
+            raise ValueError(f"window_ms must be a float or 'auto', "
+                             f"got {self.window_ms!r}")
+
+    @property
+    def auto(self) -> bool:
+        return self.window_ms == "auto"
 
     @property
     def active(self) -> bool:
-        return self.serial or self.window_ms > 0.0
+        return self.serial or self.auto or self.window_ms > 0.0
+
+    @property
+    def worst_case_window_ms(self) -> float:
+        """Upper bound on formation delay — what timeouts must absorb."""
+        return self.max_window_ms if self.auto else float(self.window_ms)
 
 
 class _BatchOp:
@@ -204,13 +226,16 @@ class _BatchOp:
 
 
 class _Lane:
-    __slots__ = ("pending", "busy", "timer", "ripe")
+    __slots__ = ("pending", "busy", "timer", "ripe", "last_arrival",
+                 "iat_ewma")
 
     def __init__(self) -> None:
         self.pending: List[_BatchOp] = []
         self.busy = False              # a flush round trip is in flight
         self.timer = None              # armed window timer
         self.ripe = False              # window elapsed while lane was busy
+        self.last_arrival: Optional[float] = None   # adaptive-window EWMA
+        self.iat_ewma: Optional[float] = None       # mean inter-arrival ms
 
 
 class GroupCommitIngress:
@@ -236,15 +261,45 @@ class GroupCommitIngress:
         lane = self._lanes.setdefault(op.partition, _Lane())
         lane.pending.append(op)
         self.ops_in += 1
+        if self.cfg.auto:
+            now = self.sim.now
+            if lane.last_arrival is not None:
+                dt = now - lane.last_arrival
+                if dt >= self.cfg.max_window_ms:
+                    # The lane went idle: burst history must not make a
+                    # lone straggler wait out a formation window.
+                    lane.iat_ewma = None
+                else:
+                    lane.iat_ewma = (dt if lane.iat_ewma is None
+                                     else 0.8 * lane.iat_ewma + 0.2 * dt)
+            lane.last_arrival = now
         self._poke(lane)
         return op.done
+
+    def _window_ms(self, lane: _Lane) -> float:
+        """Formation window for this lane's next batch.
+
+        Fixed configs return ``window_ms`` verbatim.  "auto" is
+        load-proportional: an idle lane (mean inter-arrival above the
+        clamp) never delays, and a busy lane waits just long enough to
+        fill the remaining batch capacity at the observed arrival rate,
+        clamped to [0, max_window_ms].
+        """
+        if not self.cfg.auto:
+            return float(self.cfg.window_ms)
+        iat = lane.iat_ewma
+        if iat is None or iat >= self.cfg.max_window_ms:
+            return 0.0
+        room = max(0, self.cfg.max_batch - len(lane.pending))
+        return min(self.cfg.max_window_ms, iat * room)
 
     def _poke(self, lane: _Lane) -> None:
         if lane.busy or not lane.pending:
             return
-        if self.cfg.window_ms > 0 and len(lane.pending) < self.cfg.max_batch:
+        window = self._window_ms(lane)
+        if window > 0 and len(lane.pending) < self.cfg.max_batch:
             if lane.timer is None:
-                lane.timer = self.sim.timer(self.cfg.window_ms,
+                lane.timer = self.sim.timer(window,
                                             lambda: self._fire(lane))
             return
         self._fire(lane)
@@ -271,7 +326,7 @@ class GroupCommitIngress:
         if not lane.pending:
             lane.ripe = False
             return
-        if (lane.ripe or self.cfg.window_ms <= 0
+        if (lane.ripe or self._window_ms(lane) <= 0
                 or len(lane.pending) >= self.cfg.max_batch):
             lane.ripe = False
             self._fire(lane)
@@ -555,17 +610,32 @@ class SimStorage:
 # failures, which plain first-write-wins replicas cannot guarantee (a 1-1
 # split across a 2-of-3 quorum has no winner without a second round).
 #
-# Ballots are ``(round, proposer_id)`` tuples.  Every slot has one *natural
-# owner* holding an implicit promise for OWNER_BALLOT — the slot's partition
-# owner when compute coordinates replication ("coloc", the paper's
-# participant-coordinates-replication rows of Table 3), or the storage
-# service's initial leader replica in leader mode.  The owner skips phase 1
-# (1 round trip); every other proposer — and any post-failover leader — runs
-# the full prepare+accept (2 round trips), exactly the accounting behind
+# Ballots are ``(epoch, round, proposer_id)`` tuples — Multi-Paxos style.
+# The *epoch* is a leadership term: whoever holds the epoch's lease holds an
+# implicit phase-1 promise at round 1 for ALL current and future slots of
+# the partition, so every slot costs one accept round (the phase-1-free
+# fast path).  Within an epoch, a per-slot proposer (a termination CAS, a
+# fallback after a lost batch) prepares at round >= 2 and beats the
+# leaseholder's round-1 ballot on that slot alone — first-writer-wins races
+# resolve exactly as before.  A new leader acquires epoch e+1 with ONE bulk
+# ``prepare_epoch`` round (promoting the per-partition epoch ballot on a
+# quorum), which supersedes every epoch-e ballot.
+#
+# Epoch 1 is the *implicit* initial lease: the slot's partition owner when
+# compute coordinates replication ("coloc", the paper's participant-
+# coordinates-replication rows of Table 3), or the storage service's
+# initial leader replica in leader mode.  Its holder skips phase 1 from the
+# first op with no acquisition round — which is what keeps the no-failure
+# timing bit-identical to the single-epoch implementation and reproduces
 # Table 3's 2pc=5 / cornus=3 / 2pc-coloc=3 / cornus-coloc=2 RTT totals.
+#
+# Leases are time-bounded (sim clock / wall clock) but safety NEVER rests
+# on lease timing: an expired or superseded leaseholder's round-1 accepts
+# simply fail (the replicas promised a higher ballot) and the op falls back
+# to the full prepare+accept proposer, preserving single-winner-per-slot.
 
-Ballot = Tuple[int, int]
-OWNER_BALLOT: Ballot = (1, 0)
+Ballot = Tuple[int, int, int]
+OWNER_BALLOT: Ballot = (1, 1, 0)
 
 
 class QuorumUnavailable(RuntimeError):
@@ -600,6 +670,12 @@ class ReplicaLog:
         self._lock = threading.Lock()
         self._slots: Dict[Tuple[str, str], _Slot] = {}
         self._data_bytes: Dict[str, int] = {}
+        self._payloads: Dict[Tuple[str, str], bytes] = {}
+        # Highest epoch ballot promised — covers every slot, current and
+        # future, of every partition this replica hosts (the bulk phase-1
+        # of Multi-Paxos leases).  Starts at OWNER_BALLOT: the implicit
+        # epoch-1 lease of the natural owner.
+        self.epoch_promised: Ballot = OWNER_BALLOT
 
     def _slot(self, key: Tuple[str, str]) -> _Slot:
         s = self._slots.get(key)
@@ -609,21 +685,54 @@ class ReplicaLog:
 
     # -- acceptor ----------------------------------------------------------
     def prepare(self, key, ballot: Ballot):
-        """-> (ok, acc_ballot, acc_value, visible_value, gen, decided)."""
+        """-> (ok, acc_ballot, acc_value, visible_value, gen, decided,
+        promised) — ``promised`` is the effective promise (max of the
+        slot's own ballot and the epoch ballot), so a rejected proposer
+        learns the epoch to exceed instead of blindly bumping rounds."""
         with self._lock:
             s = self._slot(key)
-            ok = ballot > s.promised
+            ok = ballot > max(s.promised, self.epoch_promised)
             if ok:
                 s.promised = ballot
-            return (ok, s.acc_ballot, s.acc_value, s.value, s.gen, s.decided)
+            return (ok, s.acc_ballot, s.acc_value, s.value, s.gen,
+                    s.decided, max(s.promised, self.epoch_promised))
+
+    def prepare_epoch(self, ballot: Ballot):
+        """Bulk phase-1 for a leadership epoch: promote the epoch ballot
+        covering all current and future slots in ONE request.
+
+        -> (ok, promised, inflight) where ``inflight`` lists
+        (key, acc_ballot, acc_value) for every undecided slot holding an
+        accepted value — the Multi-Paxos recovery obligation the new
+        leaseholder must complete (re-propose at its epoch ballot) before
+        serving fresh values on those slots."""
+        with self._lock:
+            ok = ballot > self.epoch_promised
+            if ok:
+                self.epoch_promised = ballot
+            inflight = [(key, s.acc_ballot, s.acc_value)
+                        for key, s in self._slots.items()
+                        if s.acc_value is not None and not s.decided]
+            return (ok, self.epoch_promised, inflight)
 
     def accept(self, key, ballot: Ballot, value: Vote) -> bool:
         with self._lock:
             s = self._slot(key)
-            if ballot < s.promised:
+            if ballot < max(s.promised, self.epoch_promised):
                 return False
             if s.acc_ballot == ballot and s.acc_value not in (None, value):
                 return False   # same-ballot different-value: never diverge
+            if s.decided:
+                # Consensus already reached here: a different value can
+                # only come from a round-1 accept that skipped this slot's
+                # phase-1 history (a NEW epoch's leaseholder serving a
+                # fresh caller value).  Reject it — the proposer falls
+                # back, runs prepare, and adopts the chosen value.  The
+                # learned value is authoritative (acc_value may briefly
+                # hold a losing round-1 value until learn aligns it).
+                chosen = s.value if s.value is not None else s.acc_value
+                if chosen is not None and value != chosen:
+                    return False
             s.promised = ballot
             s.acc_ballot, s.acc_value = ballot, value
             return True
@@ -635,6 +744,13 @@ class ReplicaLog:
             s.decided = True
             if s.gen == 0:
                 s.value, s.gen, s.writer = value, 1, writer
+            # Align the acceptor state with the chosen value: a competing
+            # round-1 accept may have parked a LOSING value here at a
+            # higher ballot (a post-failover leaseholder serving a raced
+            # CAS on a replica that missed the decide); once the decision
+            # is known, any future adoption must carry the chosen value.
+            if s.acc_value is not None and s.acc_value != value:
+                s.acc_value = value
 
     # -- visible log -------------------------------------------------------
     def write(self, key, value: Vote, gen: int, writer: str = "") -> Vote:
@@ -670,6 +786,28 @@ class ReplicaLog:
             self._data_bytes[partition] = \
                 self._data_bytes.get(partition, 0) + nbytes
 
+    # -- bulk payloads (checkpoint shards on this replica's volume) --------
+    def put_data(self, partition: str, name: str, payload: bytes,
+                 version: int = 1) -> None:
+        with self._lock:
+            key = (partition, name)
+            cur = self._payloads.get(key)
+            if cur is None or version >= cur[0]:
+                self._payloads[key] = (version, bytes(payload))
+
+    def get_data(self, partition: str, name: str
+                 ) -> Optional[Tuple[int, bytes]]:
+        """-> (version, payload) so quorum readers can pick the freshest
+        copy (a recovered volume may hold a stale rewrite)."""
+        with self._lock:
+            return self._payloads.get((partition, name))
+
+    def drop_data(self) -> None:
+        """Model a lost volume: the replica's shard payloads are gone
+        (state slots survive separately, like a lost data disk)."""
+        with self._lock:
+            self._payloads.clear()
+
     def keys(self):
         with self._lock:
             return list(self._slots.keys())
@@ -695,6 +833,24 @@ def merge_reads(reads: Sequence[Tuple[Optional[Vote], int, bool]]):
     return value, gen, decided
 
 
+@dataclass
+class StoreLease:
+    """One leadership epoch over a ``ReplicatedStore``/``ReplicatedSimStorage``.
+
+    Holding a valid lease grants the phase-1-free fast path (round-1
+    accepts at ``ballot``) for EVERY slot; validity is advisory only —
+    expiry or preemption by a higher epoch costs round trips, never
+    safety, because replicas enforce the ballot order regardless."""
+
+    epoch: int
+    holder: str                  # writer id (threaded) / replica idx (sim)
+    ballot: Ballot
+    expires_at: float            # time.monotonic() (threaded) / sim.now
+
+    def valid_at(self, now: float) -> bool:
+        return now < self.expires_at
+
+
 class ReplicatedStore:
     """Majority-quorum store over R ``ReplicaLog``s (threaded deployments).
 
@@ -704,6 +860,13 @@ class ReplicatedStore:
     quorum read with lazy repair of stale replicas.  ``fail_replica`` /
     ``recover_replica`` model per-replica outages; state survives an outage
     (crash, not amnesia), recovered replicas catch up via read repair.
+
+    ``acquire_lease(holder)`` promotes a fresh epoch ballot on a quorum in
+    one bulk prepare round (wall-clock bounded); while the lease is valid,
+    every ``log_once`` issued with ``writer == holder`` skips phase 1 even
+    for slots the writer does not own.  ``put_data``/``get_data`` replicate
+    bulk shard payloads to every alive replica volume, so the checkpoint
+    committer survives the loss of any minority of volumes.
     """
 
     def __init__(self, n_replicas: int = 3, seed: int = 0,
@@ -718,6 +881,15 @@ class ReplicatedStore:
         self.max_rounds = max_rounds
         self.cas_attempts = 0
         self.cas_losses = 0
+        self._lease: Optional[StoreLease] = None
+        self.lease_acquisitions = 0
+        self.fast_path_ops = 0
+        self.fallback_ops = 0
+        # Slots whose in-flight value could NOT be re-proposed at quorum
+        # during lease acquisition: the fast path must avoid them (a
+        # round-1 accept there could contradict a possibly-chosen value);
+        # the full proposer adopts the accepted value correctly.
+        self._pinned: set = set()
 
     @property
     def n(self) -> int:
@@ -748,6 +920,79 @@ class ReplicatedStore:
                     r.repair(key, value, gen, decided)
         return value, gen, decided, len(alive)
 
+    # -- leadership leases (epoch ballots, wall-clock bounded) -------------
+    def current_lease(self) -> Optional[StoreLease]:
+        lease = self._lease
+        if lease is not None and lease.valid_at(time.monotonic()):
+            return lease
+        return None
+
+    def acquire_lease(self, holder: str,
+                      duration_s: float = 5.0) -> StoreLease:
+        """One bulk prepare round: promote a fresh epoch ballot on a quorum
+        (covering all current and future slots) and complete any in-flight
+        undecided slots at it — then ``holder`` serves every slot with
+        round-1 accepts until the lease expires or is superseded."""
+        with self._glock:
+            epoch = self._lease.epoch if self._lease is not None else 1
+        for attempt in range(self.max_rounds):
+            alive = self.alive_replicas()
+            if len(alive) < self.quorum:
+                raise QuorumUnavailable("majority down during lease acquire")
+            epoch += 1
+            ballot: Ballot = (epoch, 1, next(self._pids))
+            oks = 0
+            inflight: Dict[Tuple[str, str], Tuple[Ballot, Vote]] = {}
+            for r in alive:
+                ok, promised, acc = r.prepare_epoch(ballot)
+                if ok:
+                    oks += 1
+                    for key, ab, av in acc:
+                        cur = inflight.get(key)
+                        if cur is None or ab > cur[0]:
+                            inflight[key] = (ab, av)
+                else:
+                    epoch = max(epoch, promised[0])
+            if oks < self.quorum:
+                time.sleep(self._rng.random() * 1e-4 * (attempt + 1))
+                continue
+            # Multi-Paxos recovery: re-propose in-flight values at the new
+            # epoch ballot so later round-1 accepts can never contradict a
+            # value the previous epoch may already have chosen.  A slot
+            # whose re-propose misses quorum stays PINNED: the lease is
+            # still useful for every other slot, but fast-path serving of
+            # a pinned slot could overwrite the unrecovered value.
+            for key, (_ab, av) in sorted(inflight.items()):
+                acks = [r for r in self.alive_replicas()
+                        if r.accept(key, ballot, av)]
+                if len(acks) >= self.quorum:
+                    for r in self.alive_replicas():
+                        r.learn(key, av)
+                    self._pinned.discard(key)
+                else:
+                    self._pinned.add(key)
+            lease = StoreLease(epoch, holder, ballot,
+                               time.monotonic() + duration_s)
+            with self._glock:
+                # Install-if-newer: a concurrent acquirer whose ballot
+                # already superseded ours on the replicas must not be
+                # overwritten by our stale (and unusable) lease.
+                cur = self._lease
+                installed = cur is None or ballot > cur.ballot
+                if installed:
+                    self._lease = lease
+                else:
+                    epoch = max(epoch, cur.epoch)
+            if not installed:
+                # Lost the install race: retry above the winner so the
+                # caller really ends up holding the lease it asked for.
+                time.sleep(self._rng.random() * 1e-4 * (attempt + 1))
+                continue
+            self.lease_acquisitions += 1
+            return lease
+        raise QuorumUnavailable(
+            f"no lease after {self.max_rounds} rounds")
+
     # -- operations --------------------------------------------------------
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "") -> Vote:
@@ -760,7 +1005,18 @@ class ReplicatedStore:
             if value != state:
                 self.cas_losses += 1
             return value
-        first = self._propose(key, state, owner=(writer == partition))
+        lease = self.current_lease()
+        use_lease = lease is not None and lease.holder == writer
+        fast_ballot = lease.ballot if use_lease else OWNER_BALLOT
+        # The partition owner's implicit fast path only exists in the
+        # epoch-1 world: once ANY lease was acquired, every replica's
+        # epoch promise permanently exceeds OWNER_BALLOT and a round-1
+        # attempt at it is a guaranteed-dead quorum round.
+        owner = (use_lease or (writer == partition
+                               and self._lease is None)) \
+            and key not in self._pinned
+        first = self._propose(key, state, owner=owner,
+                              fast_ballot=fast_ballot)
         if first != state:
             self.cas_losses += 1
             return first
@@ -770,27 +1026,44 @@ class ReplicatedStore:
         value, _, _, _ = self._read_merge(key)
         return value if value is not None else first
 
-    def _propose(self, key, my_value: Vote, owner: bool) -> Vote:
+    def _propose(self, key, my_value: Vote, owner: bool,
+                 fast_ballot: Ballot = OWNER_BALLOT) -> Vote:
         pid = None
+        # Seed the fallback epoch from the store's newest lease too — a
+        # non-leaseholder starting at epoch 1 after an acquisition would
+        # burn a guaranteed-rejected prepare round just to learn it.
+        lease = self._lease
+        epoch = max(fast_ballot[0],
+                    lease.epoch if lease is not None else 1)
+        fell_back = False
         for attempt in range(self.max_rounds):
             alive = self.alive_replicas()
             if len(alive) < self.quorum:
                 raise QuorumUnavailable("majority down during propose")
             adopted = my_value
             if owner and attempt == 0:
-                ballot = OWNER_BALLOT          # implicit phase 1
+                ballot = fast_ballot           # implicit phase 1
                 voters = alive
             else:
+                if not fell_back:
+                    fell_back = True
+                    self.fallback_ops += 1
                 if pid is None:
                     pid = next(self._pids)
-                ballot = (attempt + 2, pid)
+                ballot = (epoch, attempt + 2, pid)
                 voters, best, seen = [], None, None
                 for r in alive:
-                    ok, ab, av, vis, gen, decided = r.prepare(key, ballot)
+                    ok, ab, av, vis, gen, decided, promised = \
+                        r.prepare(key, ballot)
                     if vis is not None and decided:
+                        self._pinned.discard(key)
+                        for rr in self.alive_replicas():
+                            rr.learn(key, vis)   # converge stragglers
                         return vis             # already chosen and visible
                     if ok:
                         voters.append(r)
+                    elif promised[0] > epoch:
+                        epoch = promised[0]    # jump stale epochs, not rounds
                     if av is not None and (best is None or ab > best[0]):
                         best = (ab, av)
                     if vis is not None and seen is None:
@@ -801,6 +1074,10 @@ class ReplicatedStore:
                 adopted = best[1] if best else (seen or my_value)
             acks = sum(1 for r in voters if r.accept(key, ballot, adopted))
             if acks >= self.quorum:
+                if owner and attempt == 0:
+                    self.fast_path_ops += 1
+                else:
+                    self._pinned.discard(key)   # settled by a full round
                 for r in self.alive_replicas():
                     r.learn(key, adopted)
                 return adopted
@@ -832,6 +1109,33 @@ class ReplicatedStore:
     def log_data(self, partition: str, nbytes: int) -> None:
         for r in self.alive_replicas():
             r.log_data(partition, nbytes)
+
+    # -- bulk payloads (checkpoint shards, replicated R ways) --------------
+    def put_data(self, partition: str, name: str, payload: bytes) -> None:
+        alive = self.alive_replicas()
+        if len(alive) < self.quorum:
+            raise QuorumUnavailable(
+                f"{len(alive)}/{self.n} replicas alive for put_data")
+        with self._glock:
+            # Version each rewrite so readers can spot a stale copy on a
+            # replica that was down during the rewrite (crash, not
+            # amnesia: its old payload survives recovery).
+            key = ("data", partition, name)
+            ver = self._gens[key] = self._gens.get(key, 0) + 1
+        for r in alive:
+            r.put_data(partition, name, payload, version=ver)
+
+    def get_data(self, partition: str, name: str) -> bytes:
+        best: Optional[Tuple[int, bytes]] = None
+        for r in self.alive_replicas():
+            got = r.get_data(partition, name)
+            if got is not None and (best is None or got[0] > best[0]):
+                best = got
+        if best is not None:
+            return best[1]
+        # Same error surface as FileStore.get_data on a missing shard.
+        raise FileNotFoundError(f"no alive replica holds "
+                                f"{partition}/{name}")
 
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
         """Merged view over every replica's disk — ground truth for tests
@@ -914,11 +1218,18 @@ class ReplicatedSimStorage:
     Two deployment modes mirror Table 3:
       * ``leader`` — callers route to the lowest-index alive replica; the
         initial leader owns every slot's implicit phase-1 (writes cost
-        caller→leader + one accept round), a post-failover leader pays the
-        full prepare+accept.
+        caller→leader + one accept round).  A post-failover leader acquires
+        an epoch *lease* with one bulk prepare round and regains the same
+        phase-1-free fast path — batched flushes included — instead of
+        paying full prepare+accept per slot forever.
       * ``coloc``  — compute coordinates replication: the partition owner
         proposes directly to the replicas (its own vote costs one quorum
         round); termination CAS by peers pays both phases.
+
+    Leases are bounded by ``lease_ms`` of sim time (a ``Sim.timer`` marks
+    expiry); a leaseholder renews by acquiring the next epoch.  Validity is
+    purely a performance gate — replicas enforce ballot order, so an
+    expired or superseded leaseholder's accepts fail and fall back safely.
 
     Caller identity (for region lookup and slot ownership) rides on the
     ``writer`` argument the protocols already pass.
@@ -930,7 +1241,8 @@ class ReplicatedSimStorage:
                  placement: Optional[Mapping[str, str]] = None,
                  mode: str = "leader",
                  op_timeout_ms: Optional[float] = None,
-                 batch: Optional[BatchConfig] = None) -> None:
+                 batch: Optional[BatchConfig] = None,
+                 lease_ms: float = 200.0) -> None:
         assert mode in ("leader", "coloc")
         self.sim = sim
         self.model = model
@@ -960,6 +1272,27 @@ class ReplicatedSimStorage:
         self.op_timeout_ms = op_timeout_ms or (
             3.0 * self.topology.max_rtt_ms
             + 12.0 * model.conditional_write_ms + 8.0)
+        # Leadership lease: epoch 1 is the initial leader's implicit,
+        # unbounded lease (no acquisition round — keeps the no-failure
+        # timing bit-identical); failover epochs are lease_ms-bounded.
+        self.lease_ms = lease_ms
+        self._lease = StoreLease(1, 0, OWNER_BALLOT, float("inf"))
+        self._acquiring = None         # single-flight acquisition event
+        # Slots whose in-flight value a lease acquisition could not
+        # re-propose at quorum: excluded from the fast path (a round-1
+        # accept could contradict a possibly-chosen value); the full
+        # proposer adopts the accepted value correctly.
+        self._pinned: set = set()
+        self.lease_acquisitions = 0
+        self.lease_expiries = 0
+        self.fast_path_ops = 0
+        self.fallback_ops = 0
+        # (epoch, holder, acquired_at) per acquisition, epoch 1 implicit.
+        self.lease_history: List[Tuple[int, int, float]] = []
+        # epoch -> {holder: fast ops served}; in leader mode the lease
+        # property tests assert exactly one holder per epoch (in coloc,
+        # epoch 1 has one holder per partition owner by construction).
+        self.fast_ops_by_epoch: Dict[int, Dict] = {}
 
     # -- replica liveness (sim-time schedules, like Cluster nodes) ---------
     def fail_replica(self, i: int, at: float = 0.0,
@@ -983,6 +1316,129 @@ class ReplicatedSimStorage:
     def _backoff(self, attempt: int) -> float:
         return min(2.0 ** attempt, 8.0) * (0.5 + self.rng.random())
 
+    # -- leadership leases (epoch ballots over sim time) -------------------
+    def _lease_valid(self) -> bool:
+        lease = self._lease
+        return (self.replica_alive(lease.holder)
+                and lease.valid_at(self.sim.now))
+
+    def _count_fast(self, ballot: Ballot, n_ops: int = 1,
+                    holder=None) -> None:
+        """Attribute fast-path ops to (epoch, serving identity).  Leader
+        mode: the leaseholder replica (ballot's proposer).  Coloc mode:
+        pass the partition owner explicitly — every owner shares the
+        implicit epoch-1 lease over its own partition, so epoch 1
+        legitimately has one holder PER PARTITION there."""
+        self.fast_path_ops += n_ops
+        epoch = ballot[0]
+        if holder is None:
+            holder = ballot[2]
+        per_epoch = self.fast_ops_by_epoch.setdefault(epoch, {})
+        per_epoch[holder] = per_epoch.get(holder, 0) + n_ops
+
+    def _ensure_lease(self, li: int):
+        """Generator: make replica ``li`` the valid leaseholder, acquiring
+        a fresh epoch if needed.  Returns True once li holds the lease;
+        False if li died (the caller re-routes or falls back).  Immediate
+        — no sim events — when the lease is already valid, so the
+        no-failure fast path pays nothing."""
+        while True:
+            if self._lease_valid() and self._lease.holder == li:
+                return True
+            if not self.replica_alive(li):
+                return False
+            if self._acquiring is not None:
+                yield self._acquiring   # join the in-flight acquisition
+                continue                # then re-check whom it was for
+            ev = self._acquiring = self.sim.event()
+            try:
+                ok = yield from self._acquire_lease(li)
+            finally:
+                self._acquiring = None
+                ev.trigger(None)
+            if not ok:
+                return False
+
+    def _acquire_lease(self, li: int):
+        """One bulk prepare round from replica ``li``: promote a fresh
+        epoch ballot on a quorum (phase 1 for ALL current and future
+        slots), complete in-flight undecided slots at it, install the
+        lease.  Retries with a higher epoch when outballoted."""
+        epoch = self._lease.epoch
+        attempt = 0
+        src = self.replica_regions[li]
+        while True:
+            if not self.replica_alive(li):
+                return False
+            epoch += 1
+            ballot: Ballot = (epoch, 1, li)
+            resps = yield self._scatter(
+                src, lambda r, i, b=ballot: r.prepare_epoch(b),
+                self.model.read_ms,
+                lambda rs: sum(1 for _, (ok, *_r) in rs if ok)
+                >= self.quorum, li)
+            oks = 0
+            inflight: Dict[Tuple[str, str], Tuple[Ballot, Vote]] = {}
+            for _, (ok, promised, acc) in resps:
+                if ok:
+                    oks += 1
+                    for key, ab, av in acc:
+                        cur = inflight.get(key)
+                        if cur is None or ab > cur[0]:
+                            inflight[key] = (ab, av)
+                else:
+                    epoch = max(epoch, promised[0])
+            if oks < self.quorum:
+                attempt += 1
+                yield self.sim.timeout(self._backoff(attempt))
+                continue
+            if inflight:
+                # Multi-Paxos recovery: ONE accept round re-proposing every
+                # in-flight value at the epoch ballot, so later round-1
+                # accepts can never contradict a value the previous epoch
+                # may already have chosen.
+                keys = sorted(inflight)
+
+                def apply_recover(r: ReplicaLog, i: int,
+                                  keys=keys, ballot=ballot):
+                    return [r.accept(k, ballot, inflight[k][1])
+                            for k in keys]
+
+                def recovered(resps) -> bool:
+                    return all(sum(1 for _, vals in resps if vals[idx])
+                               >= self.quorum for idx in range(len(keys)))
+
+                resps = yield self._scatter(
+                    src, apply_recover,
+                    self.model.batched_write_ms(
+                        len(keys), self.model.conditional_write_ms),
+                    recovered, li)
+                for idx, k in enumerate(keys):
+                    if sum(1 for _, vals in resps
+                           if vals[idx]) >= self.quorum:
+                        self._cast(src,
+                                   lambda r, i, k=k: r.learn(
+                                       k, inflight[k][1]),
+                                   self.model.plain_write_ms, li)
+                        self._pinned.discard(k)
+                    else:
+                        # Unrecovered slot: keep it off the fast path for
+                        # this and later epochs until a full proposer
+                        # settles it.
+                        self._pinned.add(k)
+            self._lease = StoreLease(epoch, li, ballot,
+                                     self.sim.now + self.lease_ms)
+            self.lease_acquisitions += 1
+            self.lease_history.append((epoch, li, self.sim.now))
+            self.sim.timer(self.lease_ms,
+                           lambda epoch=epoch: self._note_expiry(epoch))
+            return True
+
+    def _note_expiry(self, epoch: int) -> None:
+        if self._lease.epoch == epoch and not self._lease.valid_at(
+                self.sim.now):
+            self.lease_expiries += 1
+
     # -- scatter/gather RPC layer ------------------------------------------
     def _scatter(self, src_region: str, fn, mean_ms: float, done_pred,
                  self_idx: Optional[int] = None, also=None):
@@ -996,7 +1452,14 @@ class ReplicatedSimStorage:
         ``cb(i, result)`` runs at arrival time (paxos-commit's "acceptors
         forward to the coordinator").  It is one ``(region, cb)`` pair or a
         list of them; pairs sharing a region ride ONE message per replica
-        (a batch flush forwards many slots' votes in a single push)."""
+        (a batch flush forwards many slots' votes in a single push).
+
+        A round also concludes once every replica still ALIVE has answered
+        — waiting out ``op_timeout_ms`` for a dead replica would otherwise
+        park the caller (and, under group commit, the partition's serial
+        lane) on every round whose predicate cannot be met, which is
+        exactly the post-failover stall the leases exist to remove.  With
+        no failures every replica answers, so the timing is unchanged."""
         done = self.sim.event()
         acc = {"resps": [], "count": 0}
         self.round_trips += 1
@@ -1024,8 +1487,12 @@ class ReplicatedSimStorage:
                 def respond(i=i, val=val):
                     acc["resps"].append((i, val))
                     acc["count"] += 1
+                    answered = {j for j, _ in acc["resps"]}
+                    alive_pending = any(
+                        self.replica_alive(j) for j in range(self.n)
+                        if j not in answered)
                     finish_if(done_pred(acc["resps"])
-                              or acc["count"] >= self.n)
+                              or not alive_pending)
 
                 self.sim._schedule(self.sim.now + net, respond)
                 for fwd_region, cbs in fwd_by_region.items():
@@ -1092,31 +1559,52 @@ class ReplicatedSimStorage:
     def _prep_quorum(self, resps) -> bool:
         oks = sum(1 for _, (ok, *_rest) in resps if ok)
         shortcut = any(vis is not None and decided
-                       for _, (_ok, _ab, _av, vis, _g, decided) in resps)
+                       for _, (_ok, _ab, _av, vis, _g, decided, _p)
+                       in resps)
         return oks >= self.quorum or shortcut
 
     def _quorum_log_once(self, src_region: str, self_idx: Optional[int],
                          owner_fast: bool, key, state: Vote, writer: str,
-                         forward: Optional[_Forward] = None):
+                         forward: Optional[_Forward] = None,
+                         fast_ballot: Optional[Ballot] = None):
         pid = None
         attempt = 0
+        epoch = (fast_ballot or self._lease.ballot)[0]
+        fell_back = False
         while True:
             adopted = state
             if owner_fast and attempt == 0:
-                ballot = OWNER_BALLOT
+                ballot = fast_ballot or OWNER_BALLOT
             else:
+                if not fell_back:
+                    fell_back = True
+                    self.fallback_ops += 1
                 if pid is None:
                     pid = next(self._pids)
-                ballot = (attempt + 2, pid)
+                ballot = (epoch, attempt + 2, pid)
                 resps = yield self._scatter(
                     src_region,
                     lambda r, i, b=ballot: r.prepare(key, b),
                     self.model.read_ms, self._prep_quorum, self_idx)
                 oks, best, seen = 0, None, None
-                for _, (ok, ab, av, vis, _g, decided) in resps:
+                for _, (ok, ab, av, vis, _g, decided, promised) in resps:
                     if vis is not None and decided:
+                        self._pinned.discard(key)
+                        if self.lease_acquisitions > 0:
+                            # Post-failover: push the decision to every
+                            # replica so ones that missed it (recovered
+                            # empty, or holding a losing round-1 value)
+                            # can't later out-ballot the chosen value.
+                            # Gated on failover having happened — the
+                            # no-failure event/rng stream stays
+                            # bit-identical.
+                            self._cast(src_region,
+                                       lambda r, i, v=vis: r.learn(key, v),
+                                       self.model.plain_write_ms, self_idx)
                         return vis            # first value already chosen
                     oks += 1 if ok else 0
+                    if not ok and promised[0] > epoch:
+                        epoch = promised[0]   # jump stale epochs, not rounds
                     if av is not None and (best is None or ab > best[0]):
                         best = (ab, av)
                     if vis is not None and seen is None:
@@ -1134,6 +1622,12 @@ class ReplicatedSimStorage:
                 self_idx,
                 also=self._acceptor_forward(forward, adopted))
             if sum(1 for _, ok in resps if ok) >= self.quorum:
+                if owner_fast and attempt == 0:
+                    self._count_fast(ballot,
+                                     holder=(writer if self.mode == "coloc"
+                                             else None))
+                else:
+                    self._pinned.discard(key)   # settled by a full round
                 self._cast(src_region,
                            lambda r, i, v=adopted: r.learn(key, v, writer),
                            self.model.plain_write_ms, self_idx)
@@ -1195,14 +1689,14 @@ class ReplicatedSimStorage:
         """Only slot-owner fast-path ops coalesce: the batch is ONE owner-
         ballot accept round, so every op in it must hold the slot's implicit
         phase-1 promise.  In coloc mode that is the partition owner's own
-        ops; in leader mode everything funnels through the initial leader
-        (a post-failover leader pays full prepare+accept per op, unbatched,
-        exactly like the unbatched path)."""
+        ops; in leader mode everything funnels through the CURRENT
+        leaseholder — the flush acquires an epoch lease on demand, so a
+        post-failover leader serves batches just like the initial one."""
         if self._ingress is None:
             return False
         if self.mode == "coloc":
             return bool(writer) and writer == partition
-        return self._leader_idx() == 0
+        return self._leader_idx() is not None
 
     def _submit_batched(self, op: _BatchOp):
         """Wrap lane submission with the caller's network legs (leader mode)
@@ -1210,7 +1704,8 @@ class ReplicatedSimStorage:
         def gen():
             if self.mode == "leader":
                 src = self._region_of(op.writer)
-                lr = self.replica_regions[0]
+                li = self._leader_idx()
+                lr = self.replica_regions[0 if li is None else li]
                 yield self.sim.timeout(self.topology.rtt_ms(src, lr) / 2.0)
                 result = yield self._ingress.submit(op)
                 yield self.sim.timeout(self.topology.rtt_ms(lr, src) / 2.0)
@@ -1235,18 +1730,37 @@ class ReplicatedSimStorage:
         that loses its accept round (a concurrent unbatched proposer — e.g.
         a termination CAS — promoted the slot's ballot) falls back to the
         full prepare+accept proposer, which adopts whatever value won."""
-        def gen():
+        def gen(ops=ops):
+            ballot = OWNER_BALLOT
             if self.mode == "coloc":
                 src, self_idx = self._region_of(partition), None
             else:
                 li = self._leader_idx()
-                if li != 0:
-                    # Initial leader gone between submit and flush: batch
-                    # guarantees are off, resolve each op individually.
+                has_lease = False
+                if li is not None:
+                    # Current leader acquires (or already holds) the epoch
+                    # lease — the bulk phase-1 that makes one owner-ballot
+                    # accept round valid for every slot in the batch.
+                    has_lease = yield from self._ensure_lease(li)
+                if not has_lease:
+                    # No alive leaseholder: batch guarantees are off,
+                    # resolve each op individually.
                     for op in ops:
                         self.sim.process(self._finish_fallback(op))
                     return 0
+                if self._pinned:
+                    # Unrecovered slots can't ride the round-1 batch.
+                    rest = []
+                    for op in ops:
+                        if op.kind == "log_once" and op.key in self._pinned:
+                            self.sim.process(self._finish_fallback(op))
+                        else:
+                            rest.append(op)
+                    ops = rest
+                    if not ops:
+                        return 0
                 src, self_idx = self.replica_regions[li], li
+                ballot = self._lease.ballot
             for op in ops:
                 if op.kind == "log":
                     g = self._gens.get(op.key, 1) + 1
@@ -1258,11 +1772,11 @@ class ReplicatedSimStorage:
             mean = self.model.batched_write_ms(
                 sum(op.n_records for op in ops), base)
 
-            def apply_all(r: ReplicaLog, i: int):
+            def apply_all(r: ReplicaLog, i: int, ballot=ballot):
                 out = []
                 for op in ops:
                     if op.kind == "log_once":
-                        out.append(r.accept(op.key, OWNER_BALLOT, op.state))
+                        out.append(r.accept(op.key, ballot, op.state))
                     else:
                         out.append(r.write(op.key, op.state, op.gen,
                                            op.writer))
@@ -1285,6 +1799,9 @@ class ReplicatedSimStorage:
                 if not op_satisfied(idx, resps):
                     self.sim.process(self._finish_fallback(op))
                     continue
+                self._count_fast(ballot,
+                                 holder=(partition if self.mode == "coloc"
+                                         else None))
                 if op.kind == "log_once":
                     self._cast(src,
                                lambda r, i, op=op: r.learn(op.key, op.state,
@@ -1348,10 +1865,19 @@ class ReplicatedSimStorage:
                     forward=op.fwd)
                 break
         else:
+            self.fallback_ops += 1
             if self.mode == "coloc":
                 src, self_idx = self._region_of(op.writer), None
             else:
-                li = self._leader_idx() or 0
+                # Route via the first ALIVE replica — `_leader_idx() or 0`
+                # conflated "leader is index 0" with "replica 0 is dead and
+                # so is everyone else"; wait out a total outage instead of
+                # scattering from a dead replica's position.
+                while True:
+                    li = self._leader_idx()
+                    if li is not None:
+                        break
+                    yield self.sim.timeout(self.op_timeout_ms)
                 src, self_idx = self.replica_regions[li], li
             result = yield from self._quorum_write(
                 src, self_idx, op.key, op.state, op.writer,
@@ -1384,9 +1910,22 @@ class ReplicatedSimStorage:
                     self._region_of(writer), None, owner, key, state, writer,
                     forward=fwd)
             else:
-                result = yield from self._via_leader(
-                    writer, lambda li, lr: self._quorum_log_once(
-                        lr, li, li == 0, key, state, writer), forward=fwd)
+                def inner(li, lr):
+                    # The routed-to leader acquires (or holds) the epoch
+                    # lease; with it, this op is ONE owner-ballot accept
+                    # round — initial and post-failover leaders alike.
+                    # Pinned slots (unrecovered in-flight values) must go
+                    # through the full proposer, which adopts correctly.
+                    has_lease = yield from self._ensure_lease(li)
+                    fast = has_lease and key not in self._pinned
+                    result = yield from self._quorum_log_once(
+                        lr, li, fast, key, state, writer,
+                        fast_ballot=(self._lease.ballot if fast
+                                     else None))
+                    return result
+
+                result = yield from self._via_leader(writer, inner,
+                                                     forward=fwd)
             if fwd is not None and not fwd.fired and not fwd.scheduled:
                 # Raced/short-circuited paths (value already decided before
                 # our accept round): the caller's reply doubles as the

@@ -55,10 +55,25 @@ class BenchConfig:
     # pre-batching simulator.  storage_serial=True models the serial log
     # device per partition (one write round trip in flight at a time);
     # batch_window_ms/batch_max control how aggressively queued requests
-    # coalesce into one round trip (see core.storage.BatchConfig).
-    batch_window_ms: float = 0.0
+    # coalesce into one round trip (see core.storage.BatchConfig);
+    # batch_window_ms="auto" is the load-proportional window clamped to
+    # [0, batch_max_window_ms].
+    batch_window_ms: "float | str" = 0.0
     batch_max: int = 64
     storage_serial: bool = False
+    batch_max_window_ms: float = 4.0
+    # Leadership-lease term for the replicated leader-mode store: how long
+    # a post-failover leader's epoch (acquired with ONE bulk prepare round)
+    # stays valid before a renewal round.  The initial leader's implicit
+    # epoch-1 lease never expires, so the no-failure case pays nothing.
+    lease_ms: float = 200.0
+    # Explicit protocol-timeout override (vote/decision/termination).  None
+    # keeps the auto-computed value (scaled from service times + topology),
+    # which is tuned to the NO-FAILURE tail: a failover deployment loses a
+    # replica's worth of tail absorption, so benches comparing pre/post
+    # failover set this above the degraded p99 for both runs — the paper's
+    # deployments likewise tune timeouts per storage service.
+    timeout_ms: Optional[float] = None
 
 
 @dataclass
@@ -83,6 +98,16 @@ class BenchResult:
     # storage deployments.
     storage_requests: int = 0
     storage_round_trips: int = 0
+    # Leadership-lease accounting (replicated leader mode; 0/empty
+    # elsewhere).  fast_path_ops counts ops served by an owner/lease-ballot
+    # single accept round (batched flush ops included); fallback_ops counts
+    # ops that paid the full prepare+accept (or a per-op batch fallback);
+    # lease_history holds (epoch, holder_replica, acquired_at_ms) per
+    # post-failover acquisition — time-to-fast-path falls out of it.
+    lease_acquisitions: int = 0
+    fast_path_ops: int = 0
+    fallback_ops: int = 0
+    lease_history: List[tuple] = field(default_factory=list)
 
     @staticmethod
     def _avg(xs: List[float]) -> float:
@@ -121,14 +146,16 @@ def run_bench(workload_factory, model: LatencyModel,
     placement = dict(cfg.placement) if cfg.placement else (
         cfg.topology.place_round_robin(nodes) if cfg.topology else {})
     batch = BatchConfig(window_ms=cfg.batch_window_ms,
-                        max_batch=cfg.batch_max, serial=cfg.storage_serial)
+                        max_batch=cfg.batch_max, serial=cfg.storage_serial,
+                        max_window_ms=cfg.batch_max_window_ms)
     if cfg.replication > 1 or cfg.topology is not None:
         mode = (cfg.storage_mode or proto_cls.preferred_storage_mode
                 or "leader")
         storage = ReplicatedSimStorage(
             sim, model, n_replicas=cfg.replication, seed=cfg.seed,
             topology=cfg.topology, replica_regions=cfg.replica_regions,
-            placement=placement, mode=mode, batch=batch)
+            placement=placement, mode=mode, batch=batch,
+            lease_ms=cfg.lease_ms)
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
     else:
@@ -141,8 +168,9 @@ def run_bench(workload_factory, model: LatencyModel,
     # Group-commit deployments wait out the batch window (and, with a serial
     # log device, some queueing) before a write returns: scale timeouts with
     # the window so a healthy batched write is not spuriously terminated.
-    tmo = max(25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
-              + 8.0 * topo_rtt + 8.0 * cfg.batch_window_ms)
+    tmo = cfg.timeout_ms if cfg.timeout_ms is not None else max(
+        25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
+        + 8.0 * topo_rtt + 8.0 * batch.worst_case_window_ms)
     pcfg = ProtocolConfig(protocol=cfg.protocol,
                           rtt_ms=cfg.rtt_ms, elr=cfg.elr,
                           vote_timeout_ms=tmo, decision_timeout_ms=tmo,
@@ -243,6 +271,10 @@ def run_bench(workload_factory, model: LatencyModel,
     sim.run(until=cfg.horizon_ms + 500.0)
     res.storage_requests = storage.requests
     res.storage_round_trips = storage.round_trips
+    res.lease_acquisitions = getattr(storage, "lease_acquisitions", 0)
+    res.fast_path_ops = getattr(storage, "fast_path_ops", 0)
+    res.fallback_ops = getattr(storage, "fallback_ops", 0)
+    res.lease_history = list(getattr(storage, "lease_history", ()))
     return res
 
 

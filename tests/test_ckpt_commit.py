@@ -170,6 +170,46 @@ def test_async_checkpointer_overlaps(tmp_path):
     assert latest_committed(store, ["h0"]) == 5
 
 
+def test_ckpt_commit_over_replicated_store_survives_volume_loss():
+    """The committer pointed at a ReplicatedStore (R=3 quorum CAS + shard
+    payloads replicated per volume): a full-fleet commit stays readable and
+    restorable after losing any ONE replica volume — the disaggregated
+    durability the FileStore deployment cannot give."""
+    from repro.core.storage import ReplicatedStore
+
+    store = ReplicatedStore(n_replicas=3)
+    tree = make_tree(seed=4)
+    payloads = host_payloads(tree, HOSTS)
+    outs = {}
+
+    def run(h):
+        ck = CornusCheckpointer(store, h, HOSTS, straggler_timeout_s=5.0)
+        outs[h] = ck.save(3, payloads[h])
+
+    ts = [threading.Thread(target=run, args=(h,)) for h in HOSTS]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert all(o.decision == Decision.COMMIT for o in outs.values()), outs
+    assert latest_committed(store, HOSTS) == 3
+
+    # Lose one replica: its volume (shard payloads AND state slots) is
+    # unreachable.  Quorum reads and any surviving copy of each shard keep
+    # the checkpoint fully restorable.
+    store.fail_replica(0)
+    store.replicas[0].drop_data()     # the volume is really gone
+    assert latest_committed(store, HOSTS) == 3
+    template = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = restore_params(store, HOSTS, 3, template)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # A second failure breaks quorum: unavailable, never wrong.
+    from repro.core import QuorumUnavailable
+    store.fail_replica(1)
+    with pytest.raises(QuorumUnavailable):
+        CornusCheckpointer(store, "h0", HOSTS).vote(4, payloads["h0"])
+
+
 def test_elastic_restore_different_host_count(tmp_path):
     """Written by 4 hosts, restored by a fleet of any size."""
     store = FileStore(str(tmp_path))

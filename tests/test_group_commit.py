@@ -157,6 +157,91 @@ def test_batched_silent_participant_still_aborted():
 
 
 # ---------------------------------------------------------------------------
+# Adaptive ("auto") formation window
+# ---------------------------------------------------------------------------
+def test_batch_config_auto_validation_and_bounds():
+    cfg = BatchConfig(window_ms="auto", serial=True, max_window_ms=3.0)
+    assert cfg.auto and cfg.active
+    assert cfg.worst_case_window_ms == 3.0
+    with pytest.raises(ValueError):
+        BatchConfig(window_ms="sometimes")
+    fixed = BatchConfig(window_ms=2.0)
+    assert not fixed.auto and fixed.worst_case_window_ms == 2.0
+
+
+def test_auto_window_idle_lane_never_delays():
+    """A lone request on an idle lane must flush immediately — the same
+    latency as piggyback window=0 (real log daemons only delay under
+    concurrency)."""
+    lat = {}
+    for name, window in (("fixed0", 0.0), ("auto", "auto")):
+        sim = Sim()
+        st = SimStorage(sim, AZURE_REDIS, seed=2,
+                        batch=BatchConfig(window_ms=window, serial=True))
+        ev = st.log_once("p", "t", Vote.VOTE_YES, writer="w")
+        sim.run()
+        assert ev.value == Vote.VOTE_YES
+        lat[name] = sim.now
+    assert lat["auto"] == lat["fixed0"]
+
+
+def test_auto_window_straggler_after_burst_not_delayed():
+    """A lone request arriving AFTER a burst went idle must not inherit
+    the burst's inter-arrival EWMA and wait out a formation window."""
+    sim = Sim()
+    st = SimStorage(sim, AZURE_REDIS, seed=2,
+                    batch=BatchConfig(window_ms="auto", serial=True,
+                                      max_window_ms=4.0))
+    for i in range(20):                      # dense burst, iat ~0.3 ms
+        def emit(i=i):
+            def gen():
+                yield sim.timeout(i * 0.3)
+                yield st.log_once("p", f"t{i}", Vote.VOTE_YES,
+                                  writer=f"w{i}")
+            sim.process(gen())
+        emit()
+    sim.run()
+    t_burst_end = sim.now
+    lat = {}
+
+    def straggler():
+        yield sim.timeout(50.0)              # long idle gap
+        t0 = sim.now
+        yield st.log_once("p", "late", Vote.VOTE_YES, writer="w")
+        lat["ms"] = sim.now - t0
+    sim.process(straggler())
+    sim.run()
+    assert sim.now > t_burst_end
+    # No formation delay: just the single flush's service time (well
+    # under the 4 ms clamp + service it would pay with a stale EWMA).
+    assert lat["ms"] < 4.0
+
+
+def test_auto_window_batches_under_load():
+    """A busy lane (tight arrivals) coalesces under "auto": strictly fewer
+    round trips than requests, and every caller gets the true result."""
+    sim = Sim()
+    st = SimStorage(sim, AZURE_REDIS, seed=2,
+                    batch=BatchConfig(window_ms="auto", serial=True,
+                                      max_window_ms=4.0))
+    evs = []
+
+    def emit(i):
+        def gen():
+            yield sim.timeout(i * 0.3)      # inter-arrival << max window
+            evs.append((yield st.log_once("p", f"t{i}", Vote.VOTE_YES,
+                                          writer=f"w{i}")))
+        sim.process(gen())
+
+    for i in range(20):
+        emit(i)
+    sim.run()
+    assert len(evs) == 20 and set(evs) == {Vote.VOTE_YES}
+    assert st.round_trips < st.requests
+    assert st._ingress.max_batch_seen >= 3
+
+
+# ---------------------------------------------------------------------------
 # Threaded BatchingStore decorator
 # ---------------------------------------------------------------------------
 def test_batching_store_concurrent_log_once_one_winner():
