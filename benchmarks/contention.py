@@ -16,9 +16,18 @@ Three batch modes bracket the design space:
                lane never delays, a busy lane waits up to the 4 ms clamp
                to fill the batch.
 
+Every configuration runs with the termination-storm controls ON (adaptive
+EWMA timeouts via ``timeout_ms=None``, storage decision cache +
+singleflight + push, compute-side termination dedup, fresh retry ids):
+without them the serial ``nobatch`` lanes push latency past the static
+timeouts and timed-out participants race LogOnce termination rounds
+against the queue — the storm that used to invert the paper's ordering
+(cornus 28 tps vs 2PC 168 tps on the c32/theta0.9 nobatch row).
+
 Emits ``name,value,derived`` CSV rows (latency AND throughput per config,
-plus batched-vs-unbatched speedups and storage round-trip counts) so one
-run yields the latency-vs-throughput trade-off curve.
+plus batched-vs-unbatched speedups, storage round-trip counts and the
+termination-storm counters) so one run yields the latency-vs-throughput
+trade-off curve.
 
 Standalone entry point with a CI regression gate::
 
@@ -27,18 +36,21 @@ Standalone entry point with a CI regression gate::
 
 The baseline (``BENCH_contention.json`` at the repo root) pins quick-mode
 committed-txn throughput per configuration; ``--check-baseline`` exits
-non-zero when any tracked throughput regresses more than 15%.
+non-zero when any tracked throughput regresses more than 15% — and also
+when any configuration's cornus throughput drops below its 2PC twin (the
+paper ordering the storm controls restore).
 """
 from __future__ import annotations
 
 import os
+import sys
 from typing import Dict, List
 
 from repro.core import AZURE_REDIS
 from repro.txn import BenchConfig, YCSBWorkload, run_bench
 
 from benchmarks._baseline import (REGRESSION_TOLERANCE, Row, check_baseline,
-                                  gate_main, write_baseline)
+                                  gate_main, tracked, write_baseline)
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_contention.json")
@@ -51,6 +63,13 @@ BATCH_MODES = {
     "windowauto": dict(storage_serial=True, batch_max=64,
                        batch_window_ms="auto"),
 }
+
+# Termination-storm controls (all default-off in BenchConfig; the sweep is
+# exactly the deployment they exist for).  timeout_ms stays None, which
+# attaches the adaptive EWMA timeout policy on top of the static floor.
+STORM_CONTROL = dict(decision_cache=True, termination_singleflight=True,
+                     decision_push=True, termination_dedup=True,
+                     retry_fresh_ids=True)
 
 
 def run_one(proto: str, clients: int, theta: float, mode: str,
@@ -67,7 +86,7 @@ def run_one(proto: str, clients: int, theta: float, mode: str,
     cfg = BenchConfig(protocol=proto, n_nodes=n_nodes,
                       threads_per_node=clients // n_nodes,
                       horizon_ms=horizon_ms, replication=replication,
-                      seed=seed, **BATCH_MODES[mode])
+                      seed=seed, **STORM_CONTROL, **BATCH_MODES[mode])
     return run_bench(wl, AZURE_REDIS, cfg)
 
 
@@ -75,8 +94,7 @@ def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
     """clients × zipf partition skew × protocol × batch mode."""
     grid_clients = (32,) if quick else (16, 32, 64)
     grid_theta = (0.9,) if quick else (0.0, 0.9)
-    protos = ("cornus", "2pc") if quick else (
-        "cornus", "2pc", "cornus-opt1", "paxos-commit")
+    protos = ("cornus", "2pc", "cornus-opt1", "paxos-commit")
     horizon = 600.0 if quick else 900.0
 
     rows: List[Row] = []
@@ -93,9 +111,16 @@ def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
                            f"c{clients}/theta{theta}")
                     derived = (f"commits={r.commits} aborts={r.aborts} "
                                f"gaveups={r.gaveups} "
-                               f"rtrips={r.storage_round_trips}")
+                               f"rtrips={r.storage_round_trips} "
+                               f"term={r.terminations} "
+                               f"dedup={r.dedup_hits} "
+                               f"cache={r.decision_cache_hits} "
+                               f"sf={r.singleflight_hits} "
+                               f"push={r.decisions_pushed}")
                     rows.append((f"{key}/tput_tps", r.throughput_tps, derived))
                     rows.append((f"{key}/avg_ms", r.avg_latency_ms,
+                                 f"p50={r.p50_latency_ms:.2f} "
+                                 f"p95={r.p95_latency_ms:.2f} "
                                  f"p99={r.p99_latency_ms:.2f}"))
                 for mode in ("piggyback", "window2ms", "windowauto"):
                     base = max(tput[proto]["nobatch"], 1e-9)
@@ -110,13 +135,35 @@ def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
 # ---------------------------------------------------------------------------
 # Baseline gate (CI) — shared machinery in benchmarks/_baseline.py
 # ---------------------------------------------------------------------------
+def check_cornus_vs_2pc(rows: List[Row]) -> bool:
+    """Paper-ordering gate: for every tracked configuration, cornus commits
+    at least as much as 2PC.  The nobatch rows are where the termination
+    storm used to invert this (28 vs 168 tps)."""
+    got = tracked(rows)
+    ok = True
+    for name in sorted(got):
+        if "/cornus/" not in name:
+            continue
+        peer = name.replace("/cornus/", "/2pc/")
+        if peer not in got:
+            continue
+        good = got[name] >= got[peer] * (1.0 - 1e-9)
+        verdict = "ok" if good else "ORDERING-INVERTED"
+        if not good:
+            ok = False
+        print(f"# ordering {verdict}: {name} {got[name]:.1f} "
+              f"vs 2pc {got[peer]:.1f}", file=sys.stderr)
+    return ok
+
+
 def main() -> None:
     gate_main(description=__doc__.splitlines()[0],
               sweep=lambda quick: sweep(quick=quick),
               baseline_path=BASELINE_PATH,
               bench_name="benchmarks.contention --quick",
-              error_msg="contention throughput regressed >15% "
-                        "against BENCH_contention.json")
+              error_msg="contention throughput regressed >15% against "
+                        "BENCH_contention.json (or cornus fell behind 2pc)",
+              extra_check=check_cornus_vs_2pc)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,8 @@ from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
 from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       COMPUTE_RTT_MS, CROSS_REGION, CROSS_ZONE, INTRA_ZONE,
-                      SLOW_REDIS, BatchConfig, BatchingStore, FileStore,
+                      SLOW_REDIS, BatchConfig, BatchingStore,
+                      DecisionCacheConfig, FileStore,
                       GroupCommitIngress, LatencyModel, MemoryStore,
                       QuorumUnavailable, RegionTopology, ReplicaLog,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage,
@@ -39,4 +40,5 @@ __all__ = [
     "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
     "QuorumUnavailable", "StoreLease",
     "BatchConfig", "BatchingStore", "GroupCommitIngress",
+    "DecisionCacheConfig",
 ]

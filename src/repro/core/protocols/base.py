@@ -127,7 +127,7 @@ class CommitProtocol:
             self.sim.process(self._local_vote(spec))
 
         # Collect votes.                                  [Alg1 L4-7]
-        waits = [self.wait(me, txn, f"vote:{p}", cfg.vote_timeout_ms)
+        waits = [self.wait(me, txn, f"vote:{p}", cfg.timeout_ref("vote"))
                  for p in spec.participants]
         results = yield self.sim.all_of(waits)
         if not self.alive(me):
@@ -207,7 +207,7 @@ class CommitProtocol:
 
         if spec.all_read_only and spec.read_only_known_upfront:
             tag, val = yield self.wait(me, txn, "decision",
-                                       cfg.votereq_timeout_ms)
+                                       cfg.timeout_ref("votereq"))
             self.ctx.decide(me, txn, Decision.COMMIT)
             out.decision = Decision.COMMIT
             out.done_at_ms = sim.now
@@ -215,7 +215,7 @@ class CommitProtocol:
             return out
 
         tag, msg = yield self.wait(me, txn, "vote-req",    # [Alg1 L12]
-                                   cfg.votereq_timeout_ms)
+                                   cfg.timeout_ref("votereq"))
         if not self.alive(me):
             return out
         if tag == "timeout":                               # [Alg1 L13]
@@ -248,8 +248,9 @@ class CommitProtocol:
             # protocol — it falls through to log_vote below.)
             st["status"] = "voted"
             self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
+            self._watch_decision(spec, me)
             tag, decision = yield self.wait(me, txn, "decision",
-                                            cfg.decision_timeout_ms)
+                                            cfg.timeout_ref("decision"))
             d = decision if tag == "msg" else Decision.ABORT
             return self._finish(spec, me, out, d)
 
@@ -272,14 +273,15 @@ class CommitProtocol:
             self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
 
         # Wait for the decision.                           [Alg1 L20-21]
+        self._watch_decision(spec, me)
         tag, decision = yield self.wait(me, txn, "decision",
-                                        cfg.decision_timeout_ms)
+                                        cfg.timeout_ref("decision"))
         if not self.alive(me):
             return out
         if tag == "timeout":
             out.ran_termination = True
             tstart = sim.now
-            decision = yield from self.terminate(spec, me, out)
+            decision = yield from self.run_termination(spec, me, out)
             out.termination_ms = sim.now - tstart
         if decision is None:
             # Blocked until the sim horizon (2PC family), or died.
@@ -331,6 +333,66 @@ class CommitProtocol:
         raise NotImplementedError
         yield
 
+    def run_termination(self, spec: TxnSpec, me: str, out: TxnOutcome):
+        """``terminate`` behind a per-(node, txn) singleflight.
+
+        With ``cfg.termination_dedup`` a node's concurrent termination
+        entries (decision-timeout participant, vote-timeout coordinator,
+        recovery) join the run already in flight and share its decision
+        instead of racing redundant CAS rounds.  A joiner that receives
+        None (the runner died mid-termination) retries as the leader —
+        dedup never turns a live node's bounded termination into a
+        blocked one.  Always the entry point; ``terminate`` stays the
+        per-protocol mechanism."""
+        key = (me, spec.txn_id)
+        joined = False
+        while self.cfg.termination_dedup:
+            inflight = self.ctx.term_inflight.get(key)
+            if inflight is None:
+                break
+            if not joined:
+                # One logical join per caller, however many dead runners
+                # it outlives — keeps dedup_hits an honest effectiveness
+                # counter.
+                joined = True
+                self.ctx.dedup_hits += 1
+            out.ran_termination = True
+            decision = yield inflight
+            if decision is not None or not self.alive(me):
+                return decision
+        self.ctx.terminations += 1
+        if not self.cfg.termination_dedup:
+            return (yield from self.terminate(spec, me, out))
+        ev = self.ctx.term_inflight[key] = self.sim.event()
+        decision = None
+        try:
+            decision = yield from self.terminate(spec, me, out)
+        finally:
+            if self.ctx.term_inflight.get(key) is ev:
+                del self.ctx.term_inflight[key]
+            ev.trigger(decision)
+        return decision
+
+    def _watch_decision(self, spec: TxnSpec, me: str) -> None:
+        """Register a storage decision watcher feeding ``me``'s decision
+        slot (``cfg.push_decisions``): the service pushes the txn's first
+        terminal record the moment it lands, so a participant whose
+        coordinator is slow or dead learns the decision without timing out
+        into the termination protocol."""
+        if not self.cfg.push_decisions:
+            return
+        watch = getattr(self.storage, "watch_decision", None)
+        if watch is None:
+            return
+        txn = spec.txn_id
+
+        def push(value: Vote) -> None:
+            # The storage already charged its front-end→me push leg.
+            d = (Decision.ABORT if value == Vote.ABORT else Decision.COMMIT)
+            self.transport.deliver(me, txn, "decision", d)
+
+        watch(txn, push, node=me)
+
     # -- vote forwarding (cornus-opt1 / paxos-commit) -----------------------
     def _vote_forward(self, spec: TxnSpec, me: str) -> dict:
         """log_once kwargs that make the storage service forward the slot's
@@ -374,4 +436,4 @@ class CommitProtocol:
         """In-doubt log state (None or VOTE-YES) after a crash.  Default
         (Cornus family): the storage-based termination protocol resolves in
         bounded time whether or not anyone else is alive."""
-        return (yield from self.terminate(spec, me, out))
+        return (yield from self.run_termination(spec, me, out))

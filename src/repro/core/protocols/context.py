@@ -20,6 +20,11 @@ class TxnContext:
         self.local: Dict[Tuple[str, str], Dict] = {}
         self.outcomes: Dict[Tuple[str, str], TxnOutcome] = {}
         self.blocked: Dict[Tuple[str, str], bool] = {}
+        # Termination accounting: runs started, runs absorbed by the
+        # per-(node, txn) singleflight, and the in-flight table itself.
+        self.terminations = 0
+        self.dedup_hits = 0
+        self.term_inflight: Dict[Tuple[str, str], object] = {}
         # Hooks for the transaction executor (lock release timing, ELR).
         self.on_precommit: Optional[Callable[[str, str, float], None]] = None
         self.on_finish: Optional[

@@ -46,4 +46,4 @@ class CoordinatorLogProtocol(TwoPCProtocol):
             return Decision.ABORT
         # Participant: its own log is empty by design — ask peers
         # (cooperative termination against the coordinator's memory/log).
-        return (yield from self.terminate(spec, me, out))
+        return (yield from self.run_termination(spec, me, out))

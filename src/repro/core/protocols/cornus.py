@@ -31,7 +31,7 @@ class CornusProtocol(CommitProtocol):
         return "ABORT" if resp == Vote.ABORT else "VOTE-YES"
 
     def on_vote_timeout(self, spec: TxnSpec, me: str, out: TxnOutcome):
-        return (yield from self.terminate(spec, me, out))
+        return (yield from self.run_termination(spec, me, out))
 
     def after_decision(self, spec: TxnSpec, me: str,
                        decision: Decision) -> None:
@@ -60,7 +60,7 @@ class CornusProtocol(CommitProtocol):
             if me in spec.participants:
                 reqs.append(self.storage.log_once(me, txn, Vote.ABORT,
                                                   writer=me))
-            to = self.sim.timeout(cfg.termination_retry_ms)
+            to = self.sim.timeout(cfg.timeout("termination_retry"))
             got = yield self.sim.any_of([self.sim.all_of(reqs), to])
             idx, val = got
             if idx == 1:

@@ -33,6 +33,47 @@ class ProtocolConfig:
     # RegionTopology + node→region placement instead of the scalar rtt_ms.
     topology: Optional[RegionTopology] = None
     placement: Dict[str, str] = field(default_factory=dict)
+    # --- termination-storm controls (compute side) -------------------------
+    # Participants register storage decision watchers before their decision
+    # wait, so a decided txn reaches them without waiting out a timeout.
+    push_decisions: bool = False
+    # Per-(node, txn) singleflight on the termination protocol: concurrent
+    # entries (participant timeout + recovery + coordinator vote-timeout)
+    # share ONE run's decision instead of racing redundant CAS rounds.
+    termination_dedup: bool = False
+    # Adaptive timeout policy (duck-typed: ``timeout_ms(kind, base) ->
+    # float``).  None keeps the static per-kind fields above EXACTLY; a
+    # policy may only observe (it must not consume shared rng or schedule
+    # events), so runs whose static timeouts never fire are unchanged.
+    timeout_policy: Optional[object] = None
+
+    _TIMEOUT_FIELDS = {
+        "vote": "vote_timeout_ms",
+        "decision": "decision_timeout_ms",
+        "votereq": "votereq_timeout_ms",
+        "termination_retry": "termination_retry_ms",
+        "coop_retry": "coop_retry_ms",
+    }
+
+    def timeout(self, kind: str) -> float:
+        """Effective timeout for ``kind`` — the static field, or the
+        attached policy's (EWMA-raised, jittered) value, evaluated NOW.
+        Use for sleep-like delays (retry periods)."""
+        base = getattr(self, self._TIMEOUT_FIELDS[kind])
+        if self.timeout_policy is None:
+            return base
+        return self.timeout_policy.timeout_ms(kind, base)
+
+    def timeout_ref(self, kind: str):
+        """Timeout argument for ``Transport.wait``: the static float, or —
+        with a policy attached — a zero-arg provider the wait re-evaluates
+        at every deadline expiry.  A wait armed while the latency EWMA was
+        still cold then *stretches* with the congestion the policy has
+        since observed, instead of firing a spurious first-wave storm."""
+        base = getattr(self, self._TIMEOUT_FIELDS[kind])
+        if self.timeout_policy is None:
+            return base
+        return lambda: self.timeout_policy.timeout_ms(kind, base)
 
     def link_rtt_ms(self, src: str, dst: str) -> float:
         """Round trip between two compute nodes under the active model."""
@@ -113,16 +154,39 @@ class Transport:
             self.deliveries += 1
             self.slot(dst, txn, kind).trigger(value)
 
-    def wait(self, dst: str, txn: str, kind: str, timeout_ms: float) -> Event:
-        """Event yielding ('msg', value) or ('timeout', None)."""
+    def wait(self, dst: str, txn: str, kind: str, timeout_ms) -> Event:
+        """Event yielding ('msg', value) or ('timeout', None).
+
+        ``timeout_ms`` is a float, or a zero-arg callable (an adaptive
+        timeout policy) that is re-evaluated whenever the current deadline
+        expires: if the policy has since raised the timeout — e.g. its
+        storage-latency EWMA warmed up under congestion — the wait re-arms
+        for the difference instead of reporting a timeout.  A float
+        behaves exactly as before (single deadline)."""
         slot = self.slot(dst, txn, kind)
-        to = self.sim.timeout(timeout_ms)
-        any_ev = self.sim.any_of([slot, to])
         done = self.sim.event()
+        fixed = not callable(timeout_ms)
+        provider = (lambda: timeout_ms) if fixed else timeout_ms
+        t0 = self.sim.now
 
-        def on(ev):
-            idx, val = ev.value
-            done.trigger(("msg", val) if idx == 0 else ("timeout", None))
+        def arm(budget_ms: float) -> None:
+            any_ev = self.sim.any_of([slot, self.sim.timeout(budget_ms)])
 
-        any_ev.subscribe(on)
+            def on(ev):
+                if done.triggered:
+                    return
+                idx, val = ev.value
+                if idx == 0:
+                    done.trigger(("msg", val))
+                    return
+                remaining = (0.0 if fixed
+                             else t0 + provider() - self.sim.now)
+                if remaining > 1e-9:
+                    arm(remaining)
+                else:
+                    done.trigger(("timeout", None))
+
+            any_ev.subscribe(on)
+
+        arm(provider())
         return done

@@ -51,7 +51,7 @@ class TwoPCProtocol(CommitProtocol):
                 self.send(me, p, txn, f"dec-req:{me}:{attempt}", me)
                 self._serve_decision_request(p, txn, me, attempt)
             waits = [self.wait(me, txn, f"dec-resp:{p}:{attempt}",
-                               cfg.coop_retry_ms) for p in peers]
+                               cfg.timeout_ref("coop_retry")) for p in peers]
             results = yield self.sim.all_of(waits)
             for tag, val in results:
                 if tag == "msg" and val in (Decision.COMMIT, Decision.ABORT):
@@ -59,7 +59,7 @@ class TwoPCProtocol(CommitProtocol):
             # Nobody knows: blocked. Retry (models waiting for coordinator
             # recovery); give up only when the sim horizon ends us.
             self.ctx.blocked[(txn, me)] = True
-            yield self.sim.timeout(cfg.coop_retry_ms)
+            yield self.sim.timeout(cfg.timeout("coop_retry"))
             if sim.now > 1e7:
                 return None
 
@@ -99,4 +99,4 @@ class TwoPCProtocol(CommitProtocol):
             return Decision.ABORT
         # Participant that voted yes: uncertain — cooperative termination
         # (blocks while the coordinator stays down, §2.1).
-        return (yield from self.terminate(spec, me, out))
+        return (yield from self.run_termination(spec, me, out))

@@ -50,14 +50,39 @@ class Event:
         else:
             self.callbacks.append(cb)
 
+    def unsubscribe(self, cb: Callable[["Event"], None]) -> None:
+        """Detach a callback registered with ``subscribe`` (no-op if it
+        already ran or was never attached)."""
+        try:
+            self.callbacks.remove(cb)
+        except ValueError:
+            pass
+
 
 class AnyOf(Event):
-    """Triggers with (index, value) of the first sub-event to fire."""
+    """Triggers with (index, value) of the first sub-event to fire.
+
+    The composite detaches itself from every sub-event the moment the
+    first one fires: long-lived losers (e.g. a transport message slot
+    that outlives thousands of timed-out waits) would otherwise keep the
+    callback — and through it the whole composite — alive forever.
+    """
 
     def __init__(self, sim: "Sim", events: Iterable[Event]):
         super().__init__(sim)
+        self._subs: List = []
         for i, ev in enumerate(events):
-            ev.subscribe(lambda e, i=i: self.trigger((i, e.value)))
+            cb = (lambda e, i=i: self._first(i, e))
+            self._subs.append((ev, cb))
+            ev.subscribe(cb)
+
+    def _first(self, i: int, ev: Event) -> None:
+        if self.triggered:
+            return
+        self.trigger((i, ev.value))
+        for sub, cb in self._subs:
+            sub.unsubscribe(cb)
+        self._subs = []
 
 
 class AllOf(Event):

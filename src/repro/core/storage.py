@@ -335,6 +335,190 @@ class GroupCommitIngress:
 
 
 # --------------------------------------------------------------------------
+# Storage-side termination-storm controls: decision cache + singleflight
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DecisionCacheConfig:
+    """Knobs for the storage-side decision cache (termination storms).
+
+    The paper's LogOnce semantics — "returns the existing value" — mean
+    that once a transaction's log set holds a terminal record, every later
+    LogOnce arrival should *read* the decision, not re-run agreement
+    (Gray & Lamport frame the same point for Paxos Commit).  Under a
+    saturated serial log lane, timed-out participants racing full
+    termination rounds against the queue is exactly the storm that
+    inverts the cornus-vs-2PC ordering; these knobs kill it at the
+    storage service:
+
+      cache        – once ANY slot of a txn holds a terminal record
+                     (COMMIT/ABORT), answer later ``log_once`` calls for
+                     that txn from the index: ONE cheap read, no CAS / no
+                     Paxos round, no serial-lane occupancy.
+      singleflight – concurrent in-flight ``log_once`` rounds for one
+                     identical (partition, txn, state) coalesce into ONE
+                     round whose result every caller shares (a joiner's
+                     CAS could never have mutated the slot anyway).
+      push         – proactively deliver a txn's first terminal value to
+                     registered watchers (still-waiting participants), so
+                     most of them never time out at all.
+
+    The DEFAULT config is inactive: behaviour (and the rng stream) is
+    bit-identical to the pre-cache service.  With knobs on, per-node
+    decisions keep AC1–AC3 — only round trips disappear.
+    """
+
+    cache: bool = False
+    singleflight: bool = False
+    push: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.cache or self.singleflight or self.push
+
+
+class DecisionIndex:
+    """Per-service index of terminal txn records + singleflight table +
+    decision watchers.  Owned by ``SimStorage`` / ``ReplicatedSimStorage``
+    when a ``DecisionCacheConfig`` is active."""
+
+    def __init__(self, cfg: DecisionCacheConfig) -> None:
+        self.cfg = cfg
+        self.txn_decision: Dict[str, Vote] = {}
+        self._watchers: Dict[str, List[Callable[[Vote], None]]] = {}
+        self.inflight: Dict[Tuple[str, str, str], object] = {}
+        self.hits = 0                  # log_once answered from the index
+        self.singleflight_hits = 0     # log_once joined an in-flight round
+        self.pushes = 0                # watcher deliveries
+
+    def note(self, partition: str, txn: str,
+             value: Optional[Vote]) -> None:
+        """Record a terminal value applied/observed for ``txn``; the FIRST
+        terminal record fires any registered watchers."""
+        if value is None or not value.is_decision():
+            return
+        if txn in self.txn_decision:
+            return
+        self.txn_decision[txn] = value
+        for cb in self._watchers.pop(txn, ()):
+            self.pushes += 1
+            cb(value)
+
+    def lookup(self, txn: str) -> Optional[Vote]:
+        if not self.cfg.cache:
+            return None
+        return self.txn_decision.get(txn)
+
+    def watch(self, txn: str, cb: Callable[[Vote], None]) -> None:
+        if not self.cfg.push:
+            return
+        v = self.txn_decision.get(txn)
+        if v is not None:
+            self.pushes += 1
+            cb(v)
+        else:
+            self._watchers.setdefault(txn, []).append(cb)
+
+    def join(self, key: Tuple[str, str, str]):
+        """The in-flight identical round's completion event, if any."""
+        if not self.cfg.singleflight:
+            return None
+        return self.inflight.get(key)
+
+    def lead(self, key: Tuple[str, str, str], ev) -> None:
+        if not self.cfg.singleflight:
+            return
+        self.inflight[key] = ev
+        ev.subscribe(lambda _e, key=key: self.inflight.pop(key, None))
+
+
+class _DecisionCacheMixin:
+    """Shared decision-cache plumbing for the two simulated services.
+
+    Subclass ``__init__`` sets ``self._dindex`` (or None) and
+    ``self._cache_rng``; the mixin adds the counters, the watcher API and
+    the write-latency EWMA that adaptive timeout policies read."""
+
+    _dindex: Optional[DecisionIndex]
+    # Observed write-latency stats (queueing included) — the signal an
+    # adaptive protocol-timeout policy needs to sit above the real tail.
+    write_lat_ewma: Optional[float]
+    write_lat_dev: float
+
+    def _init_decisions(self, decisions: Optional[DecisionCacheConfig],
+                        seed: int) -> None:
+        self.decisions = decisions or DecisionCacheConfig()
+        self._dindex = (DecisionIndex(self.decisions)
+                        if self.decisions.active else None)
+        # Dedicated rng for cache-hit reads: the MAIN service stream stays
+        # identical whether or not hits occur, so enabling the cache can
+        # never perturb the timing of uncached operations.
+        self._cache_rng = random.Random(seed ^ 0x0DEC1DE)
+        self.write_lat_ewma = None
+        self.write_lat_dev = 0.0
+
+    # -- counters ----------------------------------------------------------
+    @property
+    def decision_cache_hits(self) -> int:
+        return self._dindex.hits if self._dindex else 0
+
+    @property
+    def singleflight_hits(self) -> int:
+        return self._dindex.singleflight_hits if self._dindex else 0
+
+    @property
+    def decisions_pushed(self) -> int:
+        return self._dindex.pushes if self._dindex else 0
+
+    # -- watcher API (decision push) ---------------------------------------
+    def watch_decision(self, txn: str, cb: Callable[[Vote], None],
+                       node: Optional[str] = None) -> None:
+        """Run ``cb(value)`` when the txn's first terminal record lands
+        (immediately if it already has).  ``node`` is the watching compute
+        node: the service charges the storage→node push leg before
+        invoking ``cb`` (the same leg vote forwarding pays).  No-op unless
+        push is enabled."""
+        if self._dindex is not None:
+            self._dindex.watch(txn, self._push_wrapper(cb, node))
+
+    def _push_wrapper(self, cb: Callable[[Vote], None],
+                      node: Optional[str]):
+        """Storage→watcher push leg.  The single unreplicated service has
+        no distinct position (mirrors its ``on_forward`` semantics), so it
+        charges the fixed compute↔storage half-RTT; the replicated service
+        overrides this with the front-end replica's topology leg."""
+        if node is None:
+            return cb
+
+        def wrapped(value: Vote) -> None:
+            self.sim._schedule(self.sim.now + COMPUTE_RTT_MS / 2.0,
+                               lambda: cb(value))
+
+        return wrapped
+
+    def _note(self, partition: str, txn: str,
+              value: Optional[Vote]) -> None:
+        if self._dindex is not None:
+            self._dindex.note(partition, txn, value)
+
+    # -- write-latency observation (adaptive timeouts) ---------------------
+    def _note_write_latency(self, ms: float) -> None:
+        if self.write_lat_ewma is None:
+            self.write_lat_ewma = ms
+            self.write_lat_dev = ms / 4.0
+        else:
+            self.write_lat_dev = (0.75 * self.write_lat_dev
+                                  + 0.25 * abs(ms - self.write_lat_ewma))
+            self.write_lat_ewma = 0.75 * self.write_lat_ewma + 0.25 * ms
+
+    def _observed(self, ev):
+        """Record the op's caller-observed latency (queueing included) when
+        it completes.  Subscription only — no events, no rng."""
+        t0 = self.sim.now
+        ev.subscribe(lambda _e: self._note_write_latency(self.sim.now - t0))
+        return ev
+
+
+# --------------------------------------------------------------------------
 # Stores
 # --------------------------------------------------------------------------
 class MemoryStore:
@@ -473,7 +657,7 @@ class FileStore:
 # --------------------------------------------------------------------------
 # Simulated storage service: MemoryStore semantics + LatencyModel timing
 # --------------------------------------------------------------------------
-class SimStorage:
+class SimStorage(_DecisionCacheMixin):
     """Storage service as seen from inside the discrete-event simulator.
 
     A request issued at t has its CAS *applied* at t + service/2 (the moment
@@ -484,7 +668,8 @@ class SimStorage:
     """
 
     def __init__(self, sim, model: LatencyModel, seed: int = 0,
-                 batch: Optional[BatchConfig] = None) -> None:
+                 batch: Optional[BatchConfig] = None,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
         self.sim = sim
         self.model = model
         self.store = MemoryStore()
@@ -494,6 +679,7 @@ class SimStorage:
         self.batch = batch or BatchConfig()
         self._ingress = (GroupCommitIngress(sim, self.batch, self._flush)
                          if self.batch.active else None)
+        self._init_decisions(decisions, seed)
 
     # Each returns a sim Event yielding the op's result.
     def _op(self, service_ms: float, apply_fn):
@@ -533,6 +719,7 @@ class SimStorage:
                 else:
                     op.result = self.store.log(op.partition, op.txn,
                                                op.state, op.writer)
+                self._note(op.partition, op.txn, op.result)
 
         def respond():
             for op in ops:
@@ -550,29 +737,81 @@ class SimStorage:
         self._flush(op.partition, [op])
         return op.done
 
+    def _cached_answer(self, value: Vote, on_forward=None):
+        """Post-decision LogOnce answered from the decision index: ONE
+        cheap read round trip — no CAS, no serial-lane occupancy.  Samples
+        a dedicated rng so the main service stream is untouched."""
+        self._dindex.hits += 1
+        self.requests += 1
+        self.round_trips += 1
+        ms = self.model.sample(self._cache_rng, self.model.read_ms)
+        done = self.sim.event()
+        self.sim._schedule(self.sim.now + ms, lambda: done.trigger(value))
+        if on_forward is not None:
+            done.subscribe(lambda e: on_forward(e.value))
+        return done
+
+    def _applied(self, partition: str, txn: str, fn):
+        """Wrap a store apply so terminal results feed the decision index."""
+        if self._dindex is None:
+            return fn
+
+        def wrapped():
+            v = fn()
+            self._dindex.note(partition, txn, v)
+            return v
+
+        return wrapped
+
     def log_once(self, partition: str, txn: str, state: Vote, writer: str = "",
                  forward_to: Optional[str] = None, on_forward=None):
+        sfkey = (partition, txn, state.value)
+        if self._dindex is not None:
+            hit = self._dindex.lookup(txn)
+            if hit is not None:
+                # LogOnce "returns the existing value": the txn's log set
+                # already holds a terminal record, so this attempt can only
+                # read the decision — answer it without a CAS round.
+                return self._cached_answer(hit, on_forward)
+            shared = self._dindex.join(sfkey)
+            if shared is not None:
+                # Identical round already in flight (a racing terminator):
+                # share its result — the joiner's CAS could never have
+                # mutated the slot.
+                self._dindex.singleflight_hits += 1
+                self.requests += 1
+                if on_forward is not None:
+                    shared.subscribe(lambda e: on_forward(e.value))
+                return shared
         if self._ingress is not None:
-            return self._ingress.submit(
+            ev = self._ingress.submit(
                 _BatchOp("log_once", partition, txn, state, writer,
                          fwd=on_forward))
-        ms = self.model.sample(self.rng, self.model.conditional_write_ms)
-        ev = self._op(ms, lambda: self.store.log_once(partition, txn, state, writer))
-        if on_forward is not None:
-            # Vote forwarding (Table 3 cornus-opt1 / paxos-commit): the
-            # service pushes the slot's decided value to ``forward_to`` in
-            # parallel with the reply to the writer.  A single unreplicated
-            # service has no distinct acceptor/leader position, so the
-            # forwarded copy lands when the response does.
-            ev.subscribe(lambda e: on_forward(e.value))
-        return ev
+        else:
+            ms = self.model.sample(self.rng, self.model.conditional_write_ms)
+            ev = self._op(ms, self._applied(
+                partition, txn,
+                lambda: self.store.log_once(partition, txn, state, writer)))
+            if on_forward is not None:
+                # Vote forwarding (Table 3 cornus-opt1 / paxos-commit): the
+                # service pushes the slot's decided value to ``forward_to``
+                # in parallel with the reply to the writer.  A single
+                # unreplicated service has no distinct acceptor/leader
+                # position, so the forwarded copy lands when the response
+                # does.
+                ev.subscribe(lambda e: on_forward(e.value))
+        if self._dindex is not None:
+            self._dindex.lead(sfkey, ev)
+        return self._observed(ev)
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
         if self._ingress is not None:
-            return self._ingress.submit(
-                _BatchOp("log", partition, txn, state, writer))
+            return self._observed(self._ingress.submit(
+                _BatchOp("log", partition, txn, state, writer)))
         ms = self.model.sample(self.rng, self.model.plain_write_ms)
-        return self._op(ms, lambda: self.store.log(partition, txn, state, writer))
+        return self._observed(self._op(ms, self._applied(
+            partition, txn,
+            lambda: self.store.log(partition, txn, state, writer))))
 
     def read_state(self, partition: str, txn: str, writer: str = ""):
         # `writer` (the calling node) is unused here but part of the storage
@@ -580,7 +819,8 @@ class SimStorage:
         # Reads bypass the group-commit lanes (they don't hit the serial
         # log device).
         ms = self.model.sample(self.rng, self.model.read_ms)
-        return self._op(ms, lambda: self.store.read_state(partition, txn))
+        return self._op(ms, self._applied(
+            partition, txn, lambda: self.store.read_state(partition, txn)))
 
     def log_batch(self, partition: str, txn: str, state: Vote, n_records: int,
                   writer: str = ""):
@@ -595,8 +835,8 @@ class SimStorage:
         op = _BatchOp("log", partition, txn, state, writer,
                       n_records=n_records)
         if self._ingress is not None:
-            return self._ingress.submit(op)
-        return self._flush_single(op)
+            return self._observed(self._ingress.submit(op))
+        return self._observed(self._flush_single(op))
 
 
 # --------------------------------------------------------------------------
@@ -1205,7 +1445,7 @@ class _Forward:
             transport.deliver_many(group[0][0]._deliver.dst, items)
 
 
-class ReplicatedSimStorage:
+class ReplicatedSimStorage(_DecisionCacheMixin):
     """Quorum-replicated storage service inside the discrete-event sim.
 
     Drop-in for ``SimStorage``: ``log_once`` / ``log`` / ``read_state`` /
@@ -1242,7 +1482,8 @@ class ReplicatedSimStorage:
                  mode: str = "leader",
                  op_timeout_ms: Optional[float] = None,
                  batch: Optional[BatchConfig] = None,
-                 lease_ms: float = 200.0) -> None:
+                 lease_ms: float = 200.0,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
         assert mode in ("leader", "coloc")
         self.sim = sim
         self.model = model
@@ -1293,6 +1534,7 @@ class ReplicatedSimStorage:
         # property tests assert exactly one holder per epoch (in coloc,
         # epoch 1 has one holder per partition owner by construction).
         self.fast_ops_by_epoch: Dict[int, Dict] = {}
+        self._init_decisions(decisions, seed)
 
     # -- replica liveness (sim-time schedules, like Cluster nodes) ---------
     def fail_replica(self, i: int, at: float = 0.0,
@@ -1716,6 +1958,7 @@ class ReplicatedSimStorage:
                 # Raced / fallback paths: the caller's reply doubles as the
                 # forward source, like the unbatched short-circuit.
                 op.fwd.deliver_now(result)
+            self._note(op.partition, op.txn, result)
             return result
 
         return self.sim.process(gen())
@@ -1886,6 +2129,46 @@ class ReplicatedSimStorage:
         op.done.trigger(result)
         return result
 
+    # -- decision cache (termination storms) -------------------------------
+    def _push_wrapper(self, cb, node: Optional[str]):
+        """Storage→watcher push leg: the alive front-end replica's
+        half-RTT toward the watching node, evaluated at fire time (the
+        leader may have moved since the watch was registered).  With no
+        replica alive there is nobody to push — the watcher stays unserved
+        and the node times out normally."""
+        if node is None:
+            return cb
+
+        def wrapped(value: Vote) -> None:
+            li = self._leader_idx()
+            if li is None:
+                return
+            delay = self.topology.rtt_ms(self.replica_regions[li],
+                                         self._region_of(node)) / 2.0
+            self.sim._schedule(self.sim.now + delay, lambda: cb(value))
+
+        return wrapped
+
+    def _cached_answer(self, value: Vote, writer: str,
+                       fwd: Optional[_Forward], front_idx: int):
+        """Post-decision LogOnce answered by the service front-end (the
+        alive replica ``front_idx``): one caller↔service read, NO quorum
+        round.  Samples a dedicated rng so the main service stream is
+        untouched.  Callers must verify an alive front-end exists — a
+        fully-dead service has nobody to serve the index."""
+        self._dindex.hits += 1
+        src = self._region_of(writer)
+        if self.mode == "leader":
+            net = self.topology.rtt_ms(src, self.replica_regions[front_idx])
+        else:
+            net = self.topology.rtt_ms(src, src)
+        ms = net + self.model.sample(self._cache_rng, self.model.read_ms)
+        done = self.sim.event()
+        self.sim._schedule(self.sim.now + ms, lambda: done.trigger(value))
+        if fwd is not None:
+            done.subscribe(lambda e: fwd.deliver_now(e.value))
+        return done
+
     # -- public SimStorage-compatible API ----------------------------------
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "", forward_to: Optional[str] = None,
@@ -1899,9 +2182,30 @@ class ReplicatedSimStorage:
         key = (partition, txn)
         fwd = (None if on_forward is None
                else _Forward(self._region_of(forward_to), on_forward))
+        sfkey = (partition, txn, state.value)
+        if self._dindex is not None:
+            hit = self._dindex.lookup(txn)
+            # Cache answers need an alive service front-end; during a total
+            # outage the op falls through to the normal path (which waits
+            # for a leader), so recovery timing is not understated.
+            front = self._leader_idx()
+            if hit is not None and front is not None:
+                # The txn's log set already holds a terminal record: this
+                # attempt can only read the decision — no Paxos round.
+                return self._cached_answer(hit, writer, fwd, front)
+            shared = self._dindex.join(sfkey)
+            if shared is not None:
+                # Identical quorum round in flight: share its result.
+                self._dindex.singleflight_hits += 1
+                if fwd is not None:
+                    shared.subscribe(lambda e: fwd.deliver_now(e.value))
+                return shared
         if self._batchable(partition, writer):
-            return self._submit_batched(
+            ev = self._submit_batched(
                 _BatchOp("log_once", partition, txn, state, writer, fwd=fwd))
+            if self._dindex is not None:
+                self._dindex.lead(sfkey, ev)
+            return self._observed(ev)
 
         def gen():
             if self.mode == "coloc":
@@ -1931,18 +2235,22 @@ class ReplicatedSimStorage:
                 # our accept round): the caller's reply doubles as the
                 # forward source.
                 fwd.deliver_now(result)
+            self._note(partition, txn, result)
             return result
 
-        return self.sim.process(gen())
+        ev = self.sim.process(gen())
+        if self._dindex is not None:
+            self._dindex.lead(sfkey, ev)
+        return self._observed(ev)
 
     def _log_event(self, partition: str, txn: str, state: Vote, writer: str,
                    mean_ms: float, n_records: int = 1):
         self.requests += 1
         key = (partition, txn)
         if self._batchable(partition, writer):
-            return self._submit_batched(
+            return self._observed(self._submit_batched(
                 _BatchOp("log", partition, txn, state, writer,
-                         n_records=n_records))
+                         n_records=n_records)))
 
         def gen():
             if self.mode == "coloc":
@@ -1953,9 +2261,10 @@ class ReplicatedSimStorage:
                 result = yield from self._via_leader(
                     writer, lambda li, lr: self._quorum_write(
                         lr, li, key, state, writer, mean_ms))
+            self._note(partition, txn, result)
             return result
 
-        return self.sim.process(gen())
+        return self._observed(self.sim.process(gen()))
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
         return self._log_event(partition, txn, state, writer,
@@ -1981,6 +2290,7 @@ class ReplicatedSimStorage:
             else:
                 result = yield from self._via_leader(
                     writer, lambda li, lr: self._quorum_read(lr, li, key))
+            self._note(partition, txn, result)
             return result
 
         return self.sim.process(gen())

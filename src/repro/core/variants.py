@@ -84,7 +84,8 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
                                n_participants: int = 2,
                                n_replicas: int = 3,
                                seed: int = 0,
-                               batch_window_ms: float = 0.0) -> float:
+                               batch_window_ms: float = 0.0,
+                               storm_control: bool = False) -> float:
     """Measured counterpart of ``predicted_caller_latency_ms``.
 
     Runs ONE commit on the discrete-event sim against a quorum-replicated
@@ -97,10 +98,15 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
     through: 0 (the default) is the exact passthrough the equality check
     runs against; a positive window exercises the batched fast path (adds
     up to one window of queueing delay to each logged vote).
+
+    ``storm_control`` enables the full termination-storm stack (storage
+    decision cache + singleflight + push, compute-side termination dedup)
+    — on the no-failure critical path NONE of it may fire, so the measured
+    latency must stay EXACTLY on the Table-3 prediction (tested).
     """
     from .sim import Sim
-    from .storage import (BatchConfig, LatencyModel, RegionTopology,
-                          ReplicatedSimStorage)
+    from .storage import (BatchConfig, DecisionCacheConfig, LatencyModel,
+                          RegionTopology, ReplicatedSimStorage)
 
     if protocol not in SIMULATED_RTT_ROWS:
         raise ValueError(f"no simulated deployment for {protocol!r}; "
@@ -113,13 +119,18 @@ def measured_caller_latency_ms(protocol: str, paxos_rtt_ms: float,
     storage = ReplicatedSimStorage(
         sim, model, n_replicas=n_replicas, seed=seed, topology=topo,
         mode=mode, batch=BatchConfig(window_ms=batch_window_ms,
-                                     serial=batch_window_ms > 0))
+                                     serial=batch_window_ms > 0),
+        decisions=DecisionCacheConfig(cache=storm_control,
+                                      singleflight=storm_control,
+                                      push=storm_control))
     nodes = ["c"] + [f"p{i}" for i in range(n_participants)]
     tmo = 50.0 * paxos_rtt_ms
     cfg = ProtocolConfig(protocol=proto, topology=topo,
                          vote_timeout_ms=tmo, decision_timeout_ms=tmo,
                          votereq_timeout_ms=tmo, termination_retry_ms=tmo,
-                         coop_retry_ms=tmo)
+                         coop_retry_ms=tmo,
+                         push_decisions=storm_control,
+                         termination_dedup=storm_control)
     cl = Cluster(sim, storage, nodes, cfg)
     # Pure coordinator (owns no partition) — Table 3's accounting.
     spec = TxnSpec(txn_id="t3", coordinator="c",

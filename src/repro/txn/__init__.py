@@ -7,8 +7,10 @@ workloads (YCSB with zipfian skew, TPC-C NewOrder/Payment).
 from .store import LockTable, LockMode
 from .workload import (GeoYCSBWorkload, TPCCWorkload, YCSBWorkload,
                        zipf_sampler)
-from .executor import BenchConfig, BenchResult, run_bench
+from .executor import (AdaptiveTimeouts, BenchConfig, BenchResult,
+                       median_of_trials, run_bench)
 
 __all__ = ["LockTable", "LockMode", "YCSBWorkload", "TPCCWorkload",
            "GeoYCSBWorkload",
-           "zipf_sampler", "BenchConfig", "BenchResult", "run_bench"]
+           "zipf_sampler", "BenchConfig", "BenchResult", "run_bench",
+           "median_of_trials", "AdaptiveTimeouts"]

@@ -10,18 +10,66 @@ Latencies are collected for *distributed* transactions only, like the paper.
 """
 from __future__ import annotations
 
+import multiprocessing
+import os
 import random
+import sys
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from ..core.protocol import Cluster, ProtocolConfig
 from ..core.protocols import get_protocol
 from ..core.sim import Sim
 from ..core.state import Decision, TxnSpec, Vote
-from ..core.storage import (COMPUTE_RTT_MS, BatchConfig, LatencyModel,
-                            RegionTopology, ReplicatedSimStorage, SimStorage)
+from ..core.storage import (COMPUTE_RTT_MS, BatchConfig, DecisionCacheConfig,
+                            LatencyModel, RegionTopology,
+                            ReplicatedSimStorage, SimStorage)
 from .store import LockMode, LockTable
 from .workload import Txn
+
+
+class AdaptiveTimeouts:
+    """EWMA-driven protocol timeouts with desynchronizing jitter.
+
+    The static timeout formula in ``run_bench`` is tuned to the no-load
+    service tail; behind a saturated serial log lane the *observed* write
+    latency (queueing included) exceeds it by orders of magnitude, and a
+    timeout below the real tail self-amplifies: every spuriously timed-out
+    participant races a termination round against the same queue — the
+    storm that inverts the cornus-vs-2PC ordering.  The policy
+
+      * floors every timeout at the static base, so a run whose static
+        timeouts never fire behaves identically (raise-only);
+      * raises it to ``k_mean·EWMA + k_dev·dev`` of the storage service's
+        observed write latency, clamped to ``cap_factor``× the base;
+      * multiplies by a deterministic raise-only jitter from its OWN rng,
+        so closed-loop workers that do time out don't re-fire in lockstep.
+
+    The policy only reads storage counters — it consumes no shared rng and
+    schedules no events, so attaching it cannot perturb a run in which no
+    timeout fires.
+    """
+
+    def __init__(self, storage, seed: int = 0, k_mean: float = 4.0,
+                 k_dev: float = 8.0, cap_factor: float = 64.0,
+                 jitter: float = 0.25) -> None:
+        self.storage = storage
+        self.k_mean = k_mean
+        self.k_dev = k_dev
+        self.cap_factor = cap_factor
+        self.jitter = jitter
+        self._rng = random.Random(seed ^ 0x7E0117)
+
+    def timeout_ms(self, kind: str, base_ms: float) -> float:
+        ewma = getattr(self.storage, "write_lat_ewma", None)
+        t = base_ms
+        if ewma is not None:
+            dev = getattr(self.storage, "write_lat_dev", 0.0)
+            t = max(base_ms, min(self.cap_factor * base_ms,
+                                 self.k_mean * ewma + self.k_dev * dev))
+        if self.jitter:
+            t *= 1.0 + self.jitter * self._rng.random()
+        return t
 
 
 @dataclass
@@ -67,13 +115,37 @@ class BenchConfig:
     # stays valid before a renewal round.  The initial leader's implicit
     # epoch-1 lease never expires, so the no-failure case pays nothing.
     lease_ms: float = 200.0
-    # Explicit protocol-timeout override (vote/decision/termination).  None
-    # keeps the auto-computed value (scaled from service times + topology),
-    # which is tuned to the NO-FAILURE tail: a failover deployment loses a
-    # replica's worth of tail absorption, so benches comparing pre/post
-    # failover set this above the degraded p99 for both runs — the paper's
-    # deployments likewise tune timeouts per storage service.
+    # Protocol timeouts (vote/decision/termination).  None — the default —
+    # auto-computes the static floor from service times + topology AND
+    # attaches an ``AdaptiveTimeouts`` policy that raises (never lowers)
+    # the effective timeout to track the EWMA of observed storage latency,
+    # serial-lane queueing delay included, with desynchronizing jitter:
+    # no-failure runs whose static timeouts never fire are bit-identical,
+    # while saturated runs stop spuriously terminating healthy txns.  An
+    # explicit float pins fully static timeouts (the paper's deployments
+    # likewise tune timeouts per storage service).
     timeout_ms: Optional[float] = None
+    # --- termination-storm controls (all default-off) ----------------------
+    # Storage-side decision cache: once any slot of a txn holds a terminal
+    # record, later log_once calls are answered from the index (one cheap
+    # read — no CAS/Paxos round, no serial-lane slot).
+    decision_cache: bool = False
+    # Storage-side singleflight: concurrent identical in-flight log_once
+    # rounds for one (partition, txn, state) coalesce into ONE round.
+    termination_singleflight: bool = False
+    # Storage pushes a txn's first terminal value to still-waiting
+    # participants (via the transport deliver machinery), so most of them
+    # never time out into the termination protocol at all.
+    decision_push: bool = False
+    # Compute-side per-(node, txn) singleflight on terminate().
+    termination_dedup: bool = False
+    # A transaction attempt aborted by the commit protocol (terminated /
+    # voted ABORT) retries under a FRESH commit-protocol txn id: LogOnce
+    # slots of the aborted attempt stay terminal forever, so retrying the
+    # same id can only re-abort (the gaveup black hole the termination
+    # storm feeds).  NO-WAIT conflicts detected before the protocol runs
+    # leave no records and are unaffected either way.
+    retry_fresh_ids: bool = False
 
 
 @dataclass
@@ -108,21 +180,41 @@ class BenchResult:
     fast_path_ops: int = 0
     fallback_ops: int = 0
     lease_history: List[tuple] = field(default_factory=list)
+    # Termination-storm accounting: termination runs started, runs absorbed
+    # by the compute-side per-(node, txn) singleflight, log_once calls
+    # answered from the storage decision cache, calls that joined an
+    # in-flight identical round, and proactive decision pushes delivered.
+    terminations: int = 0
+    dedup_hits: int = 0
+    decision_cache_hits: int = 0
+    singleflight_hits: int = 0
+    decisions_pushed: int = 0
 
     @staticmethod
     def _avg(xs: List[float]) -> float:
         return sum(xs) / len(xs) if xs else 0.0
+
+    def _percentile(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
 
     @property
     def avg_latency_ms(self) -> float:
         return self._avg(self.latencies)
 
     @property
+    def p50_latency_ms(self) -> float:
+        return self._percentile(0.50)
+
+    @property
+    def p95_latency_ms(self) -> float:
+        return self._percentile(0.95)
+
+    @property
     def p99_latency_ms(self) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+        return self._percentile(0.99)
 
     @property
     def throughput_tps(self) -> float:
@@ -132,7 +224,9 @@ class BenchResult:
         return {"execution": self._avg(self.exec_ms),
                 "abort": self._avg(self.abort_ms),
                 "prepare": self._avg(self.prepare_ms),
-                "commit": self._avg(self.commit_ms)}
+                "commit": self._avg(self.commit_ms),
+                "p50": self.p50_latency_ms,
+                "p95": self.p95_latency_ms}
 
 
 def run_bench(workload_factory, model: LatencyModel,
@@ -148,6 +242,9 @@ def run_bench(workload_factory, model: LatencyModel,
     batch = BatchConfig(window_ms=cfg.batch_window_ms,
                         max_batch=cfg.batch_max, serial=cfg.storage_serial,
                         max_window_ms=cfg.batch_max_window_ms)
+    decisions = DecisionCacheConfig(cache=cfg.decision_cache,
+                                    singleflight=cfg.termination_singleflight,
+                                    push=cfg.decision_push)
     if cfg.replication > 1 or cfg.topology is not None:
         mode = (cfg.storage_mode or proto_cls.preferred_storage_mode
                 or "leader")
@@ -155,11 +252,12 @@ def run_bench(workload_factory, model: LatencyModel,
             sim, model, n_replicas=cfg.replication, seed=cfg.seed,
             topology=cfg.topology, replica_regions=cfg.replica_regions,
             placement=placement, mode=mode, batch=batch,
-            lease_ms=cfg.lease_ms)
+            lease_ms=cfg.lease_ms, decisions=decisions)
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
     else:
-        storage = SimStorage(sim, model, seed=cfg.seed, batch=batch)
+        storage = SimStorage(sim, model, seed=cfg.seed, batch=batch,
+                             decisions=decisions)
     # Timeouts must sit above the storage service's tail latency, or healthy
     # transactions get spuriously terminated (the paper's deployments tune
     # timeouts per service; we scale with the model's write latency, and in
@@ -168,15 +266,28 @@ def run_bench(workload_factory, model: LatencyModel,
     # Group-commit deployments wait out the batch window (and, with a serial
     # log device, some queueing) before a write returns: scale timeouts with
     # the window so a healthy batched write is not spuriously terminated.
-    tmo = cfg.timeout_ms if cfg.timeout_ms is not None else max(
-        25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
-        + 8.0 * topo_rtt + 8.0 * batch.worst_case_window_ms)
+    policy = None
+    if cfg.timeout_ms is not None:
+        tmo = cfg.timeout_ms
+    else:
+        tmo = max(
+            25.0, 8.0 * model.conditional_write_ms + 4.0 * cfg.rtt_ms
+            + 8.0 * topo_rtt + 8.0 * batch.worst_case_window_ms)
+        # The static formula becomes the FLOOR of an adaptive policy that
+        # tracks the observed (queueing-inclusive) storage latency: a
+        # saturated serial lane raises the effective timeouts instead of
+        # feeding a termination storm; runs where the static timeouts
+        # never fire are unchanged (the policy is raise-only).
+        policy = AdaptiveTimeouts(storage, seed=cfg.seed)
     pcfg = ProtocolConfig(protocol=cfg.protocol,
                           rtt_ms=cfg.rtt_ms, elr=cfg.elr,
                           vote_timeout_ms=tmo, decision_timeout_ms=tmo,
                           votereq_timeout_ms=tmo, termination_retry_ms=tmo,
                           coop_retry_ms=tmo,
-                          topology=cfg.topology, placement=placement)
+                          topology=cfg.topology, placement=placement,
+                          push_decisions=cfg.decision_push,
+                          termination_dedup=cfg.termination_dedup,
+                          timeout_policy=policy)
     cluster = Cluster(sim, storage, nodes, pcfg)
     locks = {n: LockTable(n) for n in nodes}
 
@@ -199,6 +310,15 @@ def run_bench(workload_factory, model: LatencyModel,
             committed = False
             while attempt < cfg.max_attempts:
                 attempt += 1
+                # A protocol-aborted attempt leaves terminal LogOnce records
+                # under its txn id; with retry_fresh_ids each attempt runs
+                # the commit protocol (and takes locks) under its own
+                # incarnation id, so a terminated attempt's poisoned slots
+                # can't abort every retry into a gaveup.  Attempt 1 keeps
+                # the workload id, so runs that never retry are unchanged.
+                attempt_id = (txn.txn_id
+                              if attempt == 1 or not cfg.retry_fresh_ids
+                              else f"{txn.txn_id}~r{attempt}")
                 t_attempt = sim.now
                 ok = True
                 touched: List[str] = []
@@ -210,13 +330,13 @@ def run_bench(workload_factory, model: LatencyModel,
                     yield sim.timeout(cfg.access_cpu_ms)
                     if pnode not in touched:
                         touched.append(pnode)
-                    if not locks[pnode].try_lock(txn.txn_id, key, mode):
+                    if not locks[pnode].try_lock(attempt_id, key, mode):
                         ok = False
                         break
                 if not ok:
                     res.aborts += 1
                     for p in touched:
-                        locks[p].release_all(txn.txn_id)
+                        locks[p].release_all(attempt_id)
                     backoff = cfg.backoff_ms * attempt * (0.5 + rng.random())
                     yield sim.timeout(backoff)
                     abort_time += sim.now - t_attempt
@@ -224,7 +344,7 @@ def run_bench(workload_factory, model: LatencyModel,
                 # Execution done — run atomic commit.
                 exec_ms = sim.now - t_attempt
                 spec = TxnSpec(
-                    txn_id=txn.txn_id, coordinator=node,
+                    txn_id=attempt_id, coordinator=node,
                     participants=txn.participants,
                     read_only=txn.read_only_parts,
                     read_only_known_upfront=True)
@@ -238,9 +358,9 @@ def run_bench(workload_factory, model: LatencyModel,
                     if owner != node:
                         yield sim.timeout(pcfg.link_rtt_ms(node, owner))
                     if owner not in txn.read_only_parts:
-                        yield storage.log(owner, txn.txn_id, Vote.COMMIT,
+                        yield storage.log(owner, attempt_id, Vote.COMMIT,
                                           writer=owner)
-                    release(owner, txn.txn_id)
+                    release(owner, attempt_id)
                     committed = True
                 else:
                     done = cluster.run_txn(spec)
@@ -258,7 +378,7 @@ def run_bench(workload_factory, model: LatencyModel,
                     break
                 else:
                     for p in txn.participants:
-                        locks[p].release_all(txn.txn_id)
+                        locks[p].release_all(attempt_id)
                     yield sim.timeout(cfg.backoff_ms * attempt)
                     abort_time += sim.now - t_attempt
             if not committed:
@@ -275,15 +395,66 @@ def run_bench(workload_factory, model: LatencyModel,
     res.fast_path_ops = getattr(storage, "fast_path_ops", 0)
     res.fallback_ops = getattr(storage, "fallback_ops", 0)
     res.lease_history = list(getattr(storage, "lease_history", ()))
+    res.terminations = cluster.ctx.terminations
+    res.dedup_hits = cluster.ctx.dedup_hits
+    res.decision_cache_hits = getattr(storage, "decision_cache_hits", 0)
+    res.singleflight_hits = getattr(storage, "singleflight_hits", 0)
+    res.decisions_pushed = getattr(storage, "decisions_pushed", 0)
     return res
 
 
+# Fork-inherited context for parallel trials: the workload factories used
+# throughout the benches are closures/lambdas (unpicklable as arguments),
+# but with the "fork" start method the child processes inherit them via the
+# parent's address space — only the BenchResult travels back (picklable
+# dataclass of primitives).
+_TRIAL_CTX: Optional[Tuple] = None
+
+
+def _trial_cfg(cfg: BenchConfig, t: int) -> BenchConfig:
+    return BenchConfig(**{**cfg.__dict__, "seed": cfg.seed + 1000 * t})
+
+
+def _run_trial(t: int) -> BenchResult:
+    workload_factory, model, cfg = _TRIAL_CTX
+    return run_bench(workload_factory, model, _trial_cfg(cfg, t))
+
+
 def median_of_trials(workload_factory, model: LatencyModel, cfg: BenchConfig,
-                     trials: int = 3) -> BenchResult:
-    """Paper §5.1.4: take the trial with median average latency."""
-    runs = []
-    for t in range(trials):
-        c = BenchConfig(**{**cfg.__dict__, "seed": cfg.seed + 1000 * t})
-        runs.append(run_bench(workload_factory, model, c))
+                     trials: int = 3,
+                     processes: Optional[int] = None) -> BenchResult:
+    """Paper §5.1.4: take the trial with median average latency.
+
+    Trials are independent deterministic sims (per-trial seeds derived
+    exactly as the serial implementation always did), so they fan out
+    across worker processes when the platform supports ``fork`` — cutting
+    benchmark/CI wall time to the slowest single trial.  The result (and
+    the median pick, a stable sort on avg latency) is bit-identical to the
+    serial path; pass ``processes=1`` to force serial execution.
+    """
+    global _TRIAL_CTX
+    runs: Optional[List[BenchResult]] = None
+    n_procs = min(trials, processes if processes is not None
+                  else (os.cpu_count() or 1))
+    # Forking a process that already initialized JAX's thread pools is
+    # unsafe; default to serial there (an explicit ``processes`` opts in —
+    # the forked children only run the pure-Python sim).
+    fork_ok = hasattr(os, "fork") and (processes is not None
+                                       or "jax" not in sys.modules)
+    if trials > 1 and n_procs > 1 and fork_ok:
+        _TRIAL_CTX = (workload_factory, model, cfg)
+        try:
+            ctx = multiprocessing.get_context("fork")
+            with ctx.Pool(n_procs) as pool:
+                runs = pool.map(_run_trial, range(trials))
+        except OSError as e:            # sandboxed / fork denied: go serial
+            print(f"# median_of_trials: fork pool unavailable ({e!r}), "
+                  f"running trials serially", file=sys.stderr)
+            runs = None
+        finally:
+            _TRIAL_CTX = None
+    if runs is None:
+        runs = [run_bench(workload_factory, model, _trial_cfg(cfg, t))
+                for t in range(trials)]
     runs.sort(key=lambda r: r.avg_latency_ms)
     return runs[len(runs) // 2]

@@ -1,0 +1,139 @@
+"""Property-based tests of decision-path equivalence under the
+termination-storm controls (decision cache, singleflight, push, dedup).
+
+Mirrors the group-commit invisibility suite's structure: full equality
+(decisions AND final log state AND ``writer_of`` winners) whenever no
+termination runs — the controls must be entirely invisible on the happy
+path, rng stream included — and the atomic-commit acceptance criteria
+(AC1–AC3: no split brain, never COMMIT without unanimous YES votes) under
+arbitrary failure schedules and storm-tight timeouts, for EVERY registered
+protocol.
+"""
+from __future__ import annotations
+
+import pytest
+
+from conftest import hypothesis_or_stubs
+
+HAS_HYPOTHESIS, given, settings, st = hypothesis_or_stubs()
+
+from repro.core import (AZURE_REDIS, Cluster, Decision, DecisionCacheConfig,
+                        ProtocolConfig, Sim, SimStorage, TxnSpec,
+                        registered_protocols)
+
+HORIZON = 50_000.0
+ALL_ON = DecisionCacheConfig(cache=True, singleflight=True, push=True)
+
+
+def run_cluster(proto, n, votes_yes, seed, storm, fails=None,
+                timeout_ms=25.0):
+    sim = Sim()
+    storage = SimStorage(sim, AZURE_REDIS, seed=seed,
+                         decisions=ALL_ON if storm else None)
+    nodes = [f"n{i}" for i in range(n)]
+    # coop_retry floors at 25ms: 2PC's blocked-participant poll loop runs
+    # until the blocking guard, and a sub-ms poll period would turn one
+    # blocked example into tens of millions of sim events.
+    cfg = ProtocolConfig(protocol=proto,
+                         vote_timeout_ms=timeout_ms,
+                         decision_timeout_ms=timeout_ms,
+                         votereq_timeout_ms=timeout_ms,
+                         termination_retry_ms=timeout_ms,
+                         coop_retry_ms=max(timeout_ms, 25.0),
+                         push_decisions=storm, termination_dedup=storm)
+    cluster = Cluster(sim, storage, nodes, cfg)
+    spec = TxnSpec(txn_id="t", coordinator=nodes[0], participants=nodes,
+                   votes={nd: v for nd, v in zip(nodes, votes_yes)})
+    for nd, ft in zip(nodes, fails or [None] * n):
+        if ft is not None:
+            cluster.fail(nd, ft)
+    cluster.run_txn(spec)
+    sim.run(until=HORIZON)
+    decisions = {node: s["decision"] for (node, t), s in cluster.local.items()
+                 if t == "t" and s["decision"] is not None}
+    slots = {k: (v, storage.store.writer_of(*k))
+             for k, v in storage.store.snapshot().items()}
+    return decisions, slots
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(sorted(registered_protocols())),
+       st.integers(2, 6).flatmap(lambda n: st.tuples(
+           st.just(n),
+           st.lists(st.booleans(), min_size=n, max_size=n),
+           st.integers(0, 10_000),
+       )))
+def test_storm_controls_invisible_without_termination(proto, params):
+    """No failures + generous timeouts: no termination ever runs, so the
+    storm controls must change NOTHING — identical per-node decisions and
+    identical final log state (values AND writer_of winners).  This also
+    guards the shared rng stream: a cache that consumed service randomness
+    would shift every later sample and show up as a changed log state."""
+    n, votes, seed = params
+    d0, s0 = run_cluster(proto, n, votes, seed, storm=False)
+    d1, s1 = run_cluster(proto, n, votes, seed, storm=True)
+    assert d0 == d1
+    assert s0 == s1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(sorted(registered_protocols())),
+       st.integers(2, 6).flatmap(lambda n: st.tuples(
+           st.just(n),
+           st.lists(st.booleans(), min_size=n, max_size=n),
+           st.lists(st.one_of(st.none(), st.floats(0.0, 40.0)),
+                    min_size=n, max_size=n),
+           st.integers(0, 10_000),
+           st.floats(0.5, 30.0),        # storm-tight timeouts included
+       )))
+def test_storm_controls_keep_agreement_under_failures(proto, params):
+    """AC1–AC3 with every control ON, under arbitrary failure schedules and
+    timeouts tight enough that termination (and therefore the cache /
+    singleflight / push machinery) actually fires: no split brain, and
+    never COMMIT without unanimous YES votes."""
+    n, votes, fails, seed, tmo = params
+    decisions, _ = run_cluster(proto, n, votes, seed, storm=True,
+                               fails=fails, timeout_ms=tmo)
+    assert len(set(decisions.values())) <= 1, f"split brain: {decisions}"
+    if not all(votes):
+        assert Decision.COMMIT not in decisions.values()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 5).flatmap(lambda n: st.tuples(
+    st.just(n),
+    st.lists(st.booleans(), min_size=n, max_size=n),
+    st.integers(0, 10_000),
+)))
+def test_cornus_decisions_match_with_and_without_controls_on_coord_death(
+        params):
+    """Deterministic-failure equivalence: the coordinator dies before any
+    decision is sent, every survivor resolves via termination.  The storm
+    controls may only remove round trips — the survivors' decisions match
+    the control-free run exactly."""
+    n, votes, seed = params
+    fails = [1.0] + [None] * (n - 1)
+    d0, _ = run_cluster("cornus", n, votes, seed, storm=False, fails=fails)
+    d1, _ = run_cluster("cornus", n, votes, seed, storm=True, fails=fails)
+    assert d0 == d1
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS, reason="hypothesis not installed")
+def test_meta_tight_timeouts_do_exercise_the_cache():
+    """Meta-check: the failure-schedule strategy space really does drive
+    the decision cache (guards against the suite silently testing an
+    inactive configuration)."""
+    sim_hits = 0
+    for seed in range(5):
+        sim = Sim()
+        storage = SimStorage(sim, AZURE_REDIS, seed=seed, decisions=ALL_ON)
+        nodes = ["n0", "n1", "n2", "n3"]
+        cfg = ProtocolConfig(protocol="cornus", vote_timeout_ms=2.0,
+                             decision_timeout_ms=2.0, votereq_timeout_ms=25.0,
+                             termination_retry_ms=25.0,
+                             push_decisions=True, termination_dedup=True)
+        cl = Cluster(sim, storage, nodes, cfg)
+        cl.run_txn(TxnSpec(txn_id="t", coordinator="n0", participants=nodes))
+        sim.run(until=50_000.0)
+        sim_hits += storage.decision_cache_hits
+    assert sim_hits > 0
