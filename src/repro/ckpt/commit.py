@@ -27,6 +27,7 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+from ..core.control import LeaseKeeper
 from ..core.state import Decision, Vote
 from ..core.storage import FileStore, MemoryStore
 
@@ -49,19 +50,35 @@ class CornusCheckpointer:
 
     def __init__(self, store, host: str, hosts: Sequence[str],
                  straggler_timeout_s: float = 30.0,
-                 poll_interval_s: float = 0.02):
+                 poll_interval_s: float = 0.02,
+                 lease_duration_s: float = 5.0):
         self.store = store
         self.host = host
         self.hosts = list(hosts)
         self.timeout = straggler_timeout_s
         self.poll = poll_interval_s
+        # Leadership-lease upkeep: against a lease-capable store (the
+        # replicated quorum store) the long-lived committer holds the epoch
+        # ballot, so its LogOnce writes ride the phase-1-free fast path.
+        # On a store with no lease API — or when renewal can't reach a
+        # quorum, or a live peer holds the lease — ``ensure()`` returns
+        # None and every write takes the full-prepare slow path: strictly
+        # a performance knob, never a correctness gate.
+        self.lease = LeaseKeeper(store, holder=host,
+                                 duration_s=lease_duration_s)
+
+    def _writer(self) -> str:
+        """Identity to stamp on storage writes: the lease holder when we
+        hold a live lease (fast-path accepts), else this host (slow path)."""
+        lease = self.lease.ensure()
+        return lease.holder if lease is not None else self.host
 
     # -- participant side ---------------------------------------------------
     def vote(self, epoch: int, payload: bytes) -> Vote:
         """Upload this host's shards, then CAS the VOTE-YES."""
         self.store.put_data(self.host, _txn(epoch), payload)
         return self.store.log_once(self.host, _txn(epoch), Vote.VOTE_YES,
-                                   writer=self.host)
+                                   writer=self._writer())
 
     # -- collective resolution (termination protocol §3.3) -------------------
     def read_states(self, epoch: int) -> Dict[str, Optional[Vote]]:
@@ -84,9 +101,10 @@ class CornusCheckpointer:
         """
         forced = 0
         results: List[Vote] = []
+        writer = self._writer()
         for h in self.hosts:
             r = self.store.log_once(h, _txn(epoch), Vote.ABORT,
-                                    writer=self.host)
+                                    writer=writer)
             if r == Vote.ABORT and \
                     self.store.read_state(h, _txn(epoch)) == Vote.ABORT:
                 forced += 1

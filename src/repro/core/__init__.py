@@ -12,14 +12,18 @@ Public surface:
 """
 from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
+from .control import (AdaptiveTimeouts, DecisionCacheConfig, DecisionIndex,
+                      EwmaStat, LeaseKeeper, QuorumUnavailable,
+                      ThreadControlPlane)
 from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       COMPUTE_RTT_MS, CROSS_REGION, CROSS_ZONE, INTRA_ZONE,
-                      SLOW_REDIS, BatchConfig, BatchingStore,
-                      DecisionCacheConfig, FileStore,
+                      SLOW_REDIS, BatchConfig, BatchingStore, FileStore,
                       GroupCommitIngress, LatencyModel, MemoryStore,
-                      QuorumUnavailable, RegionTopology, ReplicaLog,
+                      RegionTopology, ReplicaLog,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage,
                       StoreLease, merge_reads)
+from .stores import (StoreConfig, build_store, get_store, make_store,
+                     register_store, registered_stores)
 from .protocols import (CommitProtocol, Transport, TxnContext, get_protocol,
                         register, registered_protocols)
 from .protocol import Cluster, ProtocolConfig
@@ -40,5 +44,8 @@ __all__ = [
     "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
     "QuorumUnavailable", "StoreLease",
     "BatchConfig", "BatchingStore", "GroupCommitIngress",
-    "DecisionCacheConfig",
+    "DecisionCacheConfig", "DecisionIndex", "AdaptiveTimeouts", "EwmaStat",
+    "LeaseKeeper", "ThreadControlPlane",
+    "StoreConfig", "build_store", "get_store", "make_store",
+    "register_store", "registered_stores",
 ]

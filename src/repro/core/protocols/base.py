@@ -70,6 +70,16 @@ class CommitProtocol:
     # Storage deployment this protocol's Table-3 row assumes; the executor
     # uses it as the default ``storage_mode`` for replicated deployments.
     preferred_storage_mode: Optional[str] = None
+    # Storage-write choreography descriptors (Table 3's "who logs what"),
+    # consumed by backend-agnostic drivers — the threaded wall-clock
+    # harness replays each row's forced writes against a real store from
+    # these instead of re-implementing the sim strategies:
+    #   vote_via_log_once     – participants persist votes with LogOnce
+    #                           (Cornus family CAS) vs a plain forced log
+    #   eager_decision_record – the coordinator forces a decision record
+    #                           before replying (2PC's latency cost)
+    vote_via_log_once: bool = True
+    eager_decision_record: bool = False
 
     def __init__(self, transport: Transport, storage, ctx: TxnContext,
                  cfg: ProtocolConfig):
@@ -126,8 +136,11 @@ class CommitProtocol:
         if me in spec.participants:
             self.sim.process(self._local_vote(spec))
 
-        # Collect votes.                                  [Alg1 L4-7]
-        waits = [self.wait(me, txn, f"vote:{p}", cfg.timeout_ref("vote"))
+        # Collect votes.  Each wait names the storage lane (participant
+        # partition) whose vote write gates it, so a per-lane adaptive
+        # policy stretches ONLY the deadline of a congested partition.
+        waits = [self.wait(me, txn, f"vote:{p}",          # [Alg1 L4-7]
+                           cfg.timeout_ref("vote", lane=p))
                  for p in spec.participants]
         results = yield self.sim.all_of(waits)
         if not self.alive(me):
@@ -206,16 +219,18 @@ class CommitProtocol:
         st = self.ctx.local_state(me, txn)
 
         if spec.all_read_only and spec.read_only_known_upfront:
-            tag, val = yield self.wait(me, txn, "decision",
-                                       cfg.timeout_ref("votereq"))
+            tag, val = yield self.wait(
+                me, txn, "decision",
+                cfg.timeout_ref("votereq", lane=spec.coordinator))
             self.ctx.decide(me, txn, Decision.COMMIT)
             out.decision = Decision.COMMIT
             out.done_at_ms = sim.now
             self.ctx.record(out)
             return out
 
-        tag, msg = yield self.wait(me, txn, "vote-req",    # [Alg1 L12]
-                                   cfg.timeout_ref("votereq"))
+        tag, msg = yield self.wait(                        # [Alg1 L12]
+            me, txn, "vote-req",
+            cfg.timeout_ref("votereq", lane=spec.coordinator))
         if not self.alive(me):
             return out
         if tag == "timeout":                               # [Alg1 L13]
@@ -249,8 +264,9 @@ class CommitProtocol:
             st["status"] = "voted"
             self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
             self._watch_decision(spec, me)
-            tag, decision = yield self.wait(me, txn, "decision",
-                                            cfg.timeout_ref("decision"))
+            tag, decision = yield self.wait(
+                me, txn, "decision",
+                cfg.timeout_ref("decision", lane=spec.coordinator))
             d = decision if tag == "msg" else Decision.ABORT
             return self._finish(spec, me, out, d)
 
@@ -272,10 +288,13 @@ class CommitProtocol:
         if not self.forwards_votes:                        # [Alg1 L18-19]
             self.send(me, spec.coordinator, txn, f"vote:{me}", "VOTE-YES")
 
-        # Wait for the decision.                           [Alg1 L20-21]
-        self._watch_decision(spec, me)
-        tag, decision = yield self.wait(me, txn, "decision",
-                                        cfg.timeout_ref("decision"))
+        # Wait for the decision.  The decision's gating write (2PC's
+        # eager commit record) lands on the coordinator's partition, so
+        # that is the lane whose congestion should stretch this wait.
+        self._watch_decision(spec, me)                     # [Alg1 L20-21]
+        tag, decision = yield self.wait(
+            me, txn, "decision",
+            cfg.timeout_ref("decision", lane=spec.coordinator))
         if not self.alive(me):
             return out
         if tag == "timeout":

@@ -60,6 +60,8 @@ class CornusProtocol(CommitProtocol):
             if me in spec.participants:
                 reqs.append(self.storage.log_once(me, txn, Vote.ABORT,
                                                   writer=me))
+            # No single lane gates this retry (the CAS fan-out spans every
+            # participant's partition), so it reads the service-global EWMA.
             to = self.sim.timeout(cfg.timeout("termination_retry"))
             got = yield self.sim.any_of([self.sim.all_of(reqs), to])
             idx, val = got

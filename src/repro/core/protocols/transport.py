@@ -55,16 +55,23 @@ class ProtocolConfig:
         "coop_retry": "coop_retry_ms",
     }
 
-    def timeout(self, kind: str) -> float:
+    def timeout(self, kind: str, lane: Optional[str] = None) -> float:
         """Effective timeout for ``kind`` — the static field, or the
         attached policy's (EWMA-raised, jittered) value, evaluated NOW.
-        Use for sleep-like delays (retry periods)."""
+        Use for sleep-like delays (retry periods).
+
+        ``lane`` names the storage lane (partition) whose write the caller
+        is waiting on; a per-lane policy reads that lane's EWMA instead of
+        the service-global one.  Passed as a third positional only when
+        set, so 2-arg duck-typed policies keep working unchanged."""
         base = getattr(self, self._TIMEOUT_FIELDS[kind])
         if self.timeout_policy is None:
             return base
-        return self.timeout_policy.timeout_ms(kind, base)
+        if lane is None:
+            return self.timeout_policy.timeout_ms(kind, base)
+        return self.timeout_policy.timeout_ms(kind, base, lane)
 
-    def timeout_ref(self, kind: str):
+    def timeout_ref(self, kind: str, lane: Optional[str] = None):
         """Timeout argument for ``Transport.wait``: the static float, or —
         with a policy attached — a zero-arg provider the wait re-evaluates
         at every deadline expiry.  A wait armed while the latency EWMA was
@@ -73,7 +80,9 @@ class ProtocolConfig:
         base = getattr(self, self._TIMEOUT_FIELDS[kind])
         if self.timeout_policy is None:
             return base
-        return lambda: self.timeout_policy.timeout_ms(kind, base)
+        if lane is None:
+            return lambda: self.timeout_policy.timeout_ms(kind, base)
+        return lambda: self.timeout_policy.timeout_ms(kind, base, lane)
 
     def link_rtt_ms(self, src: str, dst: str) -> float:
         """Round trip between two compute nodes under the active model."""

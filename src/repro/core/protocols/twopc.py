@@ -13,6 +13,8 @@ from .registry import register
 class TwoPCProtocol(CommitProtocol):
 
     readonly_prepare_skip = True
+    vote_via_log_once = False         # prepare is a plain forced log
+    eager_decision_record = True      # commit record forced before reply
 
     def log_vote(self, spec: TxnSpec, me: str):
         # 2PC prepare: plain forced log write.
@@ -51,7 +53,8 @@ class TwoPCProtocol(CommitProtocol):
                 self.send(me, p, txn, f"dec-req:{me}:{attempt}", me)
                 self._serve_decision_request(p, txn, me, attempt)
             waits = [self.wait(me, txn, f"dec-resp:{p}:{attempt}",
-                               cfg.timeout_ref("coop_retry")) for p in peers]
+                               cfg.timeout_ref("coop_retry", lane=p))
+                     for p in peers]
             results = yield self.sim.all_of(waits)
             for tag, val in results:
                 if tag == "msg" and val in (Decision.COMMIT, Decision.ABORT):

@@ -31,6 +31,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from .control import (DecisionCacheConfig, DecisionIndex, EwmaStat,
+                      QuorumUnavailable, ThreadControlPlane)
 from .state import Vote
 
 
@@ -337,98 +339,10 @@ class GroupCommitIngress:
 # --------------------------------------------------------------------------
 # Storage-side termination-storm controls: decision cache + singleflight
 # --------------------------------------------------------------------------
-@dataclass(frozen=True)
-class DecisionCacheConfig:
-    """Knobs for the storage-side decision cache (termination storms).
-
-    The paper's LogOnce semantics — "returns the existing value" — mean
-    that once a transaction's log set holds a terminal record, every later
-    LogOnce arrival should *read* the decision, not re-run agreement
-    (Gray & Lamport frame the same point for Paxos Commit).  Under a
-    saturated serial log lane, timed-out participants racing full
-    termination rounds against the queue is exactly the storm that
-    inverts the cornus-vs-2PC ordering; these knobs kill it at the
-    storage service:
-
-      cache        – once ANY slot of a txn holds a terminal record
-                     (COMMIT/ABORT), answer later ``log_once`` calls for
-                     that txn from the index: ONE cheap read, no CAS / no
-                     Paxos round, no serial-lane occupancy.
-      singleflight – concurrent in-flight ``log_once`` rounds for one
-                     identical (partition, txn, state) coalesce into ONE
-                     round whose result every caller shares (a joiner's
-                     CAS could never have mutated the slot anyway).
-      push         – proactively deliver a txn's first terminal value to
-                     registered watchers (still-waiting participants), so
-                     most of them never time out at all.
-
-    The DEFAULT config is inactive: behaviour (and the rng stream) is
-    bit-identical to the pre-cache service.  With knobs on, per-node
-    decisions keep AC1–AC3 — only round trips disappear.
-    """
-
-    cache: bool = False
-    singleflight: bool = False
-    push: bool = False
-
-    @property
-    def active(self) -> bool:
-        return self.cache or self.singleflight or self.push
-
-
-class DecisionIndex:
-    """Per-service index of terminal txn records + singleflight table +
-    decision watchers.  Owned by ``SimStorage`` / ``ReplicatedSimStorage``
-    when a ``DecisionCacheConfig`` is active."""
-
-    def __init__(self, cfg: DecisionCacheConfig) -> None:
-        self.cfg = cfg
-        self.txn_decision: Dict[str, Vote] = {}
-        self._watchers: Dict[str, List[Callable[[Vote], None]]] = {}
-        self.inflight: Dict[Tuple[str, str, str], object] = {}
-        self.hits = 0                  # log_once answered from the index
-        self.singleflight_hits = 0     # log_once joined an in-flight round
-        self.pushes = 0                # watcher deliveries
-
-    def note(self, partition: str, txn: str,
-             value: Optional[Vote]) -> None:
-        """Record a terminal value applied/observed for ``txn``; the FIRST
-        terminal record fires any registered watchers."""
-        if value is None or not value.is_decision():
-            return
-        if txn in self.txn_decision:
-            return
-        self.txn_decision[txn] = value
-        for cb in self._watchers.pop(txn, ()):
-            self.pushes += 1
-            cb(value)
-
-    def lookup(self, txn: str) -> Optional[Vote]:
-        if not self.cfg.cache:
-            return None
-        return self.txn_decision.get(txn)
-
-    def watch(self, txn: str, cb: Callable[[Vote], None]) -> None:
-        if not self.cfg.push:
-            return
-        v = self.txn_decision.get(txn)
-        if v is not None:
-            self.pushes += 1
-            cb(v)
-        else:
-            self._watchers.setdefault(txn, []).append(cb)
-
-    def join(self, key: Tuple[str, str, str]):
-        """The in-flight identical round's completion event, if any."""
-        if not self.cfg.singleflight:
-            return None
-        return self.inflight.get(key)
-
-    def lead(self, key: Tuple[str, str, str], ev) -> None:
-        if not self.cfg.singleflight:
-            return
-        self.inflight[key] = ev
-        ev.subscribe(lambda _e, key=key: self.inflight.pop(key, None))
+# ``DecisionCacheConfig`` / ``DecisionIndex`` (and the adaptive-timeout /
+# lease policies that read the stats recorded here) live in ``control`` —
+# the backend-agnostic control plane shared by these simulated services and
+# the threaded stores below.  Re-exported here for compatibility.
 
 
 class _DecisionCacheMixin:
@@ -455,6 +369,10 @@ class _DecisionCacheMixin:
         self._cache_rng = random.Random(seed ^ 0x0DEC1DE)
         self.write_lat_ewma = None
         self.write_lat_dev = 0.0
+        # Per-lane (partition) stats alongside the service-global pair:
+        # pure bookkeeping (no rng, no events), consulted only by adaptive
+        # timeout policies constructed with ``per_lane=True``.
+        self._lane_lat: Dict[str, EwmaStat] = {}
 
     # -- counters ----------------------------------------------------------
     @property
@@ -501,7 +419,8 @@ class _DecisionCacheMixin:
             self._dindex.note(partition, txn, value)
 
     # -- write-latency observation (adaptive timeouts) ---------------------
-    def _note_write_latency(self, ms: float) -> None:
+    def _note_write_latency(self, ms: float,
+                            lane: Optional[str] = None) -> None:
         if self.write_lat_ewma is None:
             self.write_lat_ewma = ms
             self.write_lat_dev = ms / 4.0
@@ -509,31 +428,123 @@ class _DecisionCacheMixin:
             self.write_lat_dev = (0.75 * self.write_lat_dev
                                   + 0.25 * abs(ms - self.write_lat_ewma))
             self.write_lat_ewma = 0.75 * self.write_lat_ewma + 0.25 * ms
+        if lane is not None:
+            st = self._lane_lat.get(lane)
+            if st is None:
+                st = self._lane_lat[lane] = EwmaStat()
+            st.note(ms)
 
-    def _observed(self, ev):
+    def lane_write_latency(self, lane: str
+                           ) -> Optional[Tuple[float, float]]:
+        """(ewma, dev) of ``lane``'s observed write latency, or None if the
+        lane has never completed a write."""
+        st = self._lane_lat.get(lane)
+        if st is None or st.ewma is None:
+            return None
+        return st.ewma, st.dev
+
+    def _observed(self, ev, lane: Optional[str] = None):
         """Record the op's caller-observed latency (queueing included) when
         it completes.  Subscription only — no events, no rng."""
         t0 = self.sim.now
-        ev.subscribe(lambda _e: self._note_write_latency(self.sim.now - t0))
+        ev.subscribe(lambda _e: self._note_write_latency(self.sim.now - t0,
+                                                         lane))
         return ev
 
 
 # --------------------------------------------------------------------------
 # Stores
 # --------------------------------------------------------------------------
-class MemoryStore:
+class _ControlledStoreMixin:
+    """Threaded-store side of the shared control plane.
+
+    The simulated services above drive the decision index with sim Events;
+    the blocking stores drive the SAME index through a
+    ``ThreadControlPlane`` (real threads, one lock).  The mixin adds the
+    identical observable surface — ``decision_cache_hits`` /
+    ``singleflight_hits`` / ``decisions_pushed`` counters,
+    ``watch_decision``, and the ``write_lat_ewma`` / ``lane_write_latency``
+    stats adaptive timeout policies read — so protocol code and benches
+    are backend-agnostic.  With no active ``DecisionCacheConfig`` (the
+    default) the plane is absent and every operation is exactly the raw
+    store op."""
+
+    control: Optional[ThreadControlPlane]
+
+    def _init_control(self,
+                      decisions: Optional[DecisionCacheConfig]) -> None:
+        self.control = (ThreadControlPlane(decisions)
+                        if decisions is not None and decisions.active
+                        else None)
+
+    # -- counters (same names as the sim services) -------------------------
+    @property
+    def decision_cache_hits(self) -> int:
+        return self.control.decision_cache_hits if self.control else 0
+
+    @property
+    def singleflight_hits(self) -> int:
+        return self.control.singleflight_hits if self.control else 0
+
+    @property
+    def decisions_pushed(self) -> int:
+        return self.control.decisions_pushed if self.control else 0
+
+    @property
+    def write_lat_ewma(self) -> Optional[float]:
+        return self.control.write_lat_ewma if self.control else None
+
+    @property
+    def write_lat_dev(self) -> float:
+        return self.control.write_lat_dev if self.control else 0.0
+
+    def lane_write_latency(self, lane: str
+                           ) -> Optional[Tuple[float, float]]:
+        return self.control.lane_write_latency(lane) if self.control \
+            else None
+
+    def watch_decision(self, txn: str, cb: Callable[[Vote], None],
+                       node: Optional[str] = None) -> None:
+        if self.control is not None:
+            self.control.watch_decision(txn, cb, node)
+
+    # -- op wrappers -------------------------------------------------------
+    def _controlled_log_once(self, perform: Callable[[], Vote],
+                             partition: str, txn: str, state: Vote,
+                             writer: str) -> Vote:
+        if self.control is None:
+            return perform()
+        return self.control.log_once(perform, partition, txn, state, writer)
+
+    def _note_control(self, partition: str, txn: str,
+                      value: Optional[Vote]) -> None:
+        """Feed decisions landing outside log_once (2PC's plain decision
+        logs, recovery reads) into the index."""
+        if self.control is not None:
+            self.control.note(partition, txn, value)
+
+
+class MemoryStore(_ControlledStoreMixin):
     """Thread-safe CAS store holding per-partition transaction-state logs."""
 
-    def __init__(self) -> None:
+    def __init__(self,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
         self._lock = threading.Lock()
         # (partition, txn) -> (state, writer)
         self._state: Dict[Tuple[str, str], Tuple[Vote, str]] = {}
         self._data_bytes: Dict[str, int] = {}
         self.cas_attempts = 0
         self.cas_losses = 0
+        self._init_control(decisions)
 
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "") -> Vote:
+        return self._controlled_log_once(
+            lambda: self._log_once_direct(partition, txn, state, writer),
+            partition, txn, state, writer)
+
+    def _log_once_direct(self, partition: str, txn: str, state: Vote,
+                         writer: str = "") -> Vote:
         with self._lock:
             self.cas_attempts += 1
             key = (partition, txn)
@@ -552,9 +563,12 @@ class MemoryStore:
             key = (partition, txn)
             cur = self._state.get(key)
             if cur is not None and cur[0].is_decision() and not state.is_decision():
-                return cur[0]
-            self._state[key] = (state, writer)
-            return state
+                result = cur[0]
+            else:
+                self._state[key] = (state, writer)
+                result = state
+        self._note_control(partition, txn, result)
+        return result
 
     def read_state(self, partition: str, txn: str) -> Optional[Vote]:
         with self._lock:
@@ -575,7 +589,7 @@ class MemoryStore:
             return {k: v[0] for k, v in self._state.items()}
 
 
-class FileStore:
+class FileStore(_ControlledStoreMixin):
     """Directory-backed store: O_CREAT|O_EXCL create-if-absent is the CAS.
 
     Layout:  <root>/state/<partition>/<txn>            (one small state file)
@@ -586,10 +600,12 @@ class FileStore:
     ACL separation of §4 maps to the state/ vs data/ prefixes.
     """
 
-    def __init__(self, root: str) -> None:
+    def __init__(self, root: str,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
         self.root = root
         os.makedirs(os.path.join(root, "state"), exist_ok=True)
         os.makedirs(os.path.join(root, "data"), exist_ok=True)
+        self._init_control(decisions)
 
     def _state_path(self, partition: str, txn: str) -> str:
         d = os.path.join(self.root, "state", partition)
@@ -598,6 +614,12 @@ class FileStore:
 
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "") -> Vote:
+        return self._controlled_log_once(
+            lambda: self._log_once_direct(partition, txn, state, writer),
+            partition, txn, state, writer)
+
+    def _log_once_direct(self, partition: str, txn: str, state: Vote,
+                         writer: str = "") -> Vote:
         path = self._state_path(partition, txn)
         payload = f"{state.value}\n{writer}\n".encode()
         try:
@@ -620,6 +642,7 @@ class FileStore:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic overwrite
+        self._note_control(partition, txn, state)
         return state
 
     def _read(self, path: str) -> Vote:
@@ -802,16 +825,18 @@ class SimStorage(_DecisionCacheMixin):
                 ev.subscribe(lambda e: on_forward(e.value))
         if self._dindex is not None:
             self._dindex.lead(sfkey, ev)
-        return self._observed(ev)
+        return self._observed(ev, lane=partition)
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
         if self._ingress is not None:
             return self._observed(self._ingress.submit(
-                _BatchOp("log", partition, txn, state, writer)))
+                _BatchOp("log", partition, txn, state, writer)),
+                lane=partition)
         ms = self.model.sample(self.rng, self.model.plain_write_ms)
         return self._observed(self._op(ms, self._applied(
             partition, txn,
-            lambda: self.store.log(partition, txn, state, writer))))
+            lambda: self.store.log(partition, txn, state, writer))),
+            lane=partition)
 
     def read_state(self, partition: str, txn: str, writer: str = ""):
         # `writer` (the calling node) is unused here but part of the storage
@@ -835,8 +860,8 @@ class SimStorage(_DecisionCacheMixin):
         op = _BatchOp("log", partition, txn, state, writer,
                       n_records=n_records)
         if self._ingress is not None:
-            return self._observed(self._ingress.submit(op))
-        return self._observed(self._flush_single(op))
+            return self._observed(self._ingress.submit(op), lane=partition)
+        return self._observed(self._flush_single(op), lane=partition)
 
 
 # --------------------------------------------------------------------------
@@ -877,9 +902,8 @@ class SimStorage(_DecisionCacheMixin):
 Ballot = Tuple[int, int, int]
 OWNER_BALLOT: Ballot = (1, 1, 0)
 
-
-class QuorumUnavailable(RuntimeError):
-    """Fewer than a majority of replicas reachable (or proposer starved)."""
+# ``QuorumUnavailable`` moved to ``control`` (the lease keeper catches it
+# without importing this module); re-exported here unchanged.
 
 
 class _Slot:
@@ -1091,7 +1115,7 @@ class StoreLease:
         return now < self.expires_at
 
 
-class ReplicatedStore:
+class ReplicatedStore(_ControlledStoreMixin):
     """Majority-quorum store over R ``ReplicaLog``s (threaded deployments).
 
     Same three-operation surface as ``MemoryStore``; ``log_once`` runs the
@@ -1110,7 +1134,8 @@ class ReplicatedStore:
     """
 
     def __init__(self, n_replicas: int = 3, seed: int = 0,
-                 max_rounds: int = 256) -> None:
+                 max_rounds: int = 256,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
         assert n_replicas >= 1
         self.replicas = [ReplicaLog(i) for i in range(n_replicas)]
         self._alive = [True] * n_replicas
@@ -1130,6 +1155,7 @@ class ReplicatedStore:
         # round-1 accept there could contradict a possibly-chosen value);
         # the full proposer adopts the accepted value correctly.
         self._pinned: set = set()
+        self._init_control(decisions)
 
     @property
     def n(self) -> int:
@@ -1236,6 +1262,16 @@ class ReplicatedStore:
     # -- operations --------------------------------------------------------
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "") -> Vote:
+        # The control plane wraps the WHOLE quorum operation: a cache hit
+        # answers without any replica round, a singleflight joiner shares
+        # the leader's round (including a QuorumUnavailable, if it raised).
+        result = self._controlled_log_once(
+            lambda: self._log_once_quorum(partition, txn, state, writer),
+            partition, txn, state, writer)
+        return result
+
+    def _log_once_quorum(self, partition: str, txn: str, state: Vote,
+                         writer: str = "") -> Vote:
         key = (partition, txn)
         self.cas_attempts += 1
         value, _, decided, n_alive = self._read_merge(key)
@@ -1338,6 +1374,7 @@ class ReplicatedStore:
                    for r in self.alive_replicas()]
         if len(results) < self.quorum:
             raise QuorumUnavailable("majority down during log")
+        self._note_control(partition, txn, state)
         return state
 
     def read_state(self, partition: str, txn: str) -> Optional[Vote]:
@@ -2205,7 +2242,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                 _BatchOp("log_once", partition, txn, state, writer, fwd=fwd))
             if self._dindex is not None:
                 self._dindex.lead(sfkey, ev)
-            return self._observed(ev)
+            return self._observed(ev, lane=partition)
 
         def gen():
             if self.mode == "coloc":
@@ -2241,7 +2278,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         ev = self.sim.process(gen())
         if self._dindex is not None:
             self._dindex.lead(sfkey, ev)
-        return self._observed(ev)
+        return self._observed(ev, lane=partition)
 
     def _log_event(self, partition: str, txn: str, state: Vote, writer: str,
                    mean_ms: float, n_records: int = 1):
@@ -2250,7 +2287,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         if self._batchable(partition, writer):
             return self._observed(self._submit_batched(
                 _BatchOp("log", partition, txn, state, writer,
-                         n_records=n_records)))
+                         n_records=n_records)), lane=partition)
 
         def gen():
             if self.mode == "coloc":
@@ -2264,7 +2301,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
             self._note(partition, txn, result)
             return result
 
-        return self._observed(self.sim.process(gen()))
+        return self._observed(self.sim.process(gen()), lane=partition)
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
         return self._log_event(partition, txn, state, writer,

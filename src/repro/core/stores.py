@@ -1,0 +1,194 @@
+"""Unified store registry: one ``StoreConfig`` for both backends.
+
+The simulated services (``SimStorage`` / ``ReplicatedSimStorage``) and the
+threaded stores (``MemoryStore`` / ``FileStore`` / ``ReplicatedStore``) grew
+divergent constructor signatures; every bench and test picked a backend by
+importing a class and hand-threading its kwargs.  This module mirrors
+``protocols.registry``: backends register under a NAME, ``StoreConfig``
+carries the union of knobs (each backend reads the subset it understands,
+exactly the kwargs it always took), and ``build_store`` constructs the
+store — so ``BenchConfig`` selects storage backends the way it selects
+protocols.
+
+Registered backends:
+
+  memory          – ``MemoryStore``              (threaded, single node)
+  file            – ``FileStore``                (threaded, needs ``root``)
+  replicated      – ``ReplicatedStore``          (threaded, quorum Paxos)
+  sim             – ``SimStorage``               (needs ``sim=``)
+  replicated-sim  – ``ReplicatedSimStorage``     (needs ``sim=``)
+
+Threaded backends optionally wrap in a ``BatchingStore`` group-commit
+decorator (``batching=True``); simulated backends batch via ``BatchConfig``
+as before.  ``make_store`` keeps the old divergent-kwarg call sites working
+behind a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+from .control import DecisionCacheConfig
+from .storage import (AZURE_REDIS, BatchConfig, BatchingStore, FileStore,
+                      LatencyModel, MemoryStore, RegionTopology,
+                      ReplicatedSimStorage, ReplicatedStore, SimStorage)
+
+
+@dataclass
+class StoreConfig:
+    """Union of every backend's knobs; unknown-to-a-backend fields are
+    simply unread (the same contract ``BenchConfig`` has with protocols)."""
+
+    backend: str = "memory"            # any name in the registry
+    seed: int = 0
+    # Control plane (decision cache / singleflight / push) — consumed by
+    # every backend through the shared core in ``control``.
+    decisions: Optional[DecisionCacheConfig] = None
+    # Replicated backends (threaded and sim).
+    replication: int = 3
+    max_rounds: int = 256              # threaded proposer retry bound
+    # file backend.
+    root: Optional[str] = None
+    # Simulated services.
+    model: Optional[LatencyModel] = None
+    batch: Optional[BatchConfig] = None
+    topology: Optional[RegionTopology] = None
+    replica_regions: Optional[Sequence[str]] = None
+    placement: Optional[Mapping[str, str]] = None
+    mode: str = "leader"               # leader | coloc
+    op_timeout_ms: Optional[float] = None
+    lease_ms: float = 200.0
+    # Threaded group-commit decorator (sim backends batch via ``batch``).
+    batching: bool = False
+    window_s: float = 0.0
+    max_batch: int = 64
+
+
+_REGISTRY: Dict[str, Callable] = {}
+_SIMULATED = {"sim", "replicated-sim"}
+
+
+def register_store(name: str):
+    """Class/function decorator: register a builder under ``name``.
+
+    A builder is ``fn(cfg: StoreConfig, sim) -> store``; ``sim`` is None
+    for threaded backends."""
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_store(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown store backend {name!r} "
+                       f"(registered: {known})") from None
+
+
+def registered_stores() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def is_simulated(name: str) -> bool:
+    """True if the backend runs inside the discrete-event sim (its builder
+    requires ``sim=`` and its ops return sim Events)."""
+    get_store(name)                    # validate, same error surface
+    return name in _SIMULATED
+
+
+def build_store(cfg: StoreConfig, sim=None):
+    """Construct the configured backend (and, for threaded backends with
+    ``batching=True``, wrap it in the group-commit decorator)."""
+    builder = get_store(cfg.backend)
+    simulated = is_simulated(cfg.backend)
+    if simulated and sim is None:
+        raise ValueError(f"backend {cfg.backend!r} needs sim= "
+                         f"(it runs inside the discrete-event simulator)")
+    store = builder(cfg, sim)
+    if cfg.batching and not simulated:
+        store = BatchingStore(store, window_s=cfg.window_s,
+                              max_batch=cfg.max_batch)
+    return store
+
+
+# --------------------------------------------------------------------------
+# Builders — each constructs with EXACTLY the kwargs direct call sites
+# always passed, so switching to the factory is bit-identical.
+# --------------------------------------------------------------------------
+@register_store("memory")
+def _build_memory(cfg: StoreConfig, sim=None):
+    return MemoryStore(decisions=cfg.decisions)
+
+
+@register_store("file")
+def _build_file(cfg: StoreConfig, sim=None):
+    if cfg.root is None:
+        raise ValueError("file backend needs StoreConfig.root")
+    return FileStore(cfg.root, decisions=cfg.decisions)
+
+
+@register_store("replicated")
+def _build_replicated(cfg: StoreConfig, sim=None):
+    return ReplicatedStore(n_replicas=cfg.replication, seed=cfg.seed,
+                           max_rounds=cfg.max_rounds,
+                           decisions=cfg.decisions)
+
+
+@register_store("sim")
+def _build_sim(cfg: StoreConfig, sim=None):
+    return SimStorage(sim, cfg.model or AZURE_REDIS, seed=cfg.seed,
+                      batch=cfg.batch, decisions=cfg.decisions)
+
+
+@register_store("replicated-sim")
+def _build_replicated_sim(cfg: StoreConfig, sim=None):
+    return ReplicatedSimStorage(
+        sim, cfg.model or AZURE_REDIS, n_replicas=cfg.replication,
+        seed=cfg.seed, topology=cfg.topology,
+        replica_regions=cfg.replica_regions,
+        placement=cfg.placement, mode=cfg.mode,
+        op_timeout_ms=cfg.op_timeout_ms, batch=cfg.batch,
+        lease_ms=cfg.lease_ms, decisions=cfg.decisions)
+
+
+# --------------------------------------------------------------------------
+# Legacy shim
+# --------------------------------------------------------------------------
+# Old divergent kwarg -> StoreConfig field; same-named kwargs pass through.
+_LEGACY_KWARGS = {"n_replicas": "replication"}
+
+
+def make_store(kind: str, sim=None, **kwargs):
+    """Deprecated: construct a store from the old divergent kwargs.
+
+    Maps legacy names (``n_replicas``, threaded ``window_s`` batching, sim
+    ``window_ms`` batching) onto ``StoreConfig`` and calls ``build_store``.
+    Use ``build_store(StoreConfig(backend=...), sim=...)`` instead.
+    """
+    warnings.warn(
+        "make_store(kind, **kwargs) is deprecated; use "
+        "build_store(StoreConfig(backend=...), sim=...) — see README "
+        "'Unified store API'", DeprecationWarning, stacklevel=2)
+    cfg_kwargs = {}
+    window_ms = kwargs.pop("window_ms", None)
+    batch = kwargs.pop("batch", None)
+    if window_ms is not None and batch is None:
+        batch = BatchConfig(window_ms=window_ms,
+                            max_batch=kwargs.get("max_batch", 64))
+    if batch is not None:
+        cfg_kwargs["batch"] = batch
+    window_s = kwargs.pop("window_s", None)
+    if window_s is not None:
+        cfg_kwargs["batching"] = True
+        cfg_kwargs["window_s"] = window_s
+    for key, value in kwargs.items():
+        cfg_kwargs[_LEGACY_KWARGS.get(key, key)] = value
+    fields = StoreConfig.__dataclass_fields__
+    unknown = sorted(k for k in cfg_kwargs if k not in fields)
+    if unknown:
+        raise TypeError(f"make_store: unknown kwargs {unknown}")
+    return build_store(StoreConfig(backend=kind, **cfg_kwargs), sim=sim)

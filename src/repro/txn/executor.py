@@ -17,59 +17,19 @@ import sys
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from ..core.control import AdaptiveTimeouts, DecisionCacheConfig
 from ..core.protocol import Cluster, ProtocolConfig
 from ..core.protocols import get_protocol
 from ..core.sim import Sim
 from ..core.state import Decision, TxnSpec, Vote
-from ..core.storage import (COMPUTE_RTT_MS, BatchConfig, DecisionCacheConfig,
-                            LatencyModel, RegionTopology,
-                            ReplicatedSimStorage, SimStorage)
+from ..core.storage import (COMPUTE_RTT_MS, BatchConfig, LatencyModel,
+                            RegionTopology)
+from ..core.stores import StoreConfig, build_store
 from .store import LockMode, LockTable
 from .workload import Txn
 
-
-class AdaptiveTimeouts:
-    """EWMA-driven protocol timeouts with desynchronizing jitter.
-
-    The static timeout formula in ``run_bench`` is tuned to the no-load
-    service tail; behind a saturated serial log lane the *observed* write
-    latency (queueing included) exceeds it by orders of magnitude, and a
-    timeout below the real tail self-amplifies: every spuriously timed-out
-    participant races a termination round against the same queue — the
-    storm that inverts the cornus-vs-2PC ordering.  The policy
-
-      * floors every timeout at the static base, so a run whose static
-        timeouts never fire behaves identically (raise-only);
-      * raises it to ``k_mean·EWMA + k_dev·dev`` of the storage service's
-        observed write latency, clamped to ``cap_factor``× the base;
-      * multiplies by a deterministic raise-only jitter from its OWN rng,
-        so closed-loop workers that do time out don't re-fire in lockstep.
-
-    The policy only reads storage counters — it consumes no shared rng and
-    schedules no events, so attaching it cannot perturb a run in which no
-    timeout fires.
-    """
-
-    def __init__(self, storage, seed: int = 0, k_mean: float = 4.0,
-                 k_dev: float = 8.0, cap_factor: float = 64.0,
-                 jitter: float = 0.25) -> None:
-        self.storage = storage
-        self.k_mean = k_mean
-        self.k_dev = k_dev
-        self.cap_factor = cap_factor
-        self.jitter = jitter
-        self._rng = random.Random(seed ^ 0x7E0117)
-
-    def timeout_ms(self, kind: str, base_ms: float) -> float:
-        ewma = getattr(self.storage, "write_lat_ewma", None)
-        t = base_ms
-        if ewma is not None:
-            dev = getattr(self.storage, "write_lat_dev", 0.0)
-            t = max(base_ms, min(self.cap_factor * base_ms,
-                                 self.k_mean * ewma + self.k_dev * dev))
-        if self.jitter:
-            t *= 1.0 + self.jitter * self._rng.random()
-        return t
+__all__ = ["AdaptiveTimeouts", "BenchConfig", "BenchResult",
+           "median_of_trials", "run_bench"]
 
 
 @dataclass
@@ -94,6 +54,11 @@ class BenchConfig:
     storage_mode: Optional[str] = None
     # (replica_idx, fail_at_ms[, recover_at_ms]) outage schedule
     replica_failures: tuple = ()
+    # Storage backend by registry name (core.stores).  None — the default —
+    # keeps the historical auto-pick: "replicated-sim" when replication > 1
+    # or a topology is set, else "sim".  Naming a threaded backend here is
+    # rejected (run_bench drives a discrete-event Sim).
+    store: Optional[str] = None
     # Restrict closed-loop clients to these nodes (geo: home-region
     # coordinators only); None = clients on every node.
     coordinator_nodes: Optional[List[str]] = None
@@ -139,6 +104,12 @@ class BenchConfig:
     decision_push: bool = False
     # Compute-side per-(node, txn) singleflight on terminate().
     termination_dedup: bool = False
+    # Per-lane adaptive timeouts: the attached AdaptiveTimeouts policy reads
+    # the EWMA of the lane (partition) a wait is actually gated on instead
+    # of the service-global aggregate, so one hot zipf lane raises only its
+    # own deadlines.  Default-off: the global-EWMA baselines stay
+    # bit-identical (lane stats are recorded either way — pure bookkeeping).
+    per_lane_timeouts: bool = False
     # A transaction attempt aborted by the commit protocol (terminated /
     # voted ABORT) retries under a FRESH commit-protocol txn id: LogOnce
     # slots of the aborted attempt stay terminal forever, so retrying the
@@ -245,19 +216,21 @@ def run_bench(workload_factory, model: LatencyModel,
     decisions = DecisionCacheConfig(cache=cfg.decision_cache,
                                     singleflight=cfg.termination_singleflight,
                                     push=cfg.decision_push)
-    if cfg.replication > 1 or cfg.topology is not None:
-        mode = (cfg.storage_mode or proto_cls.preferred_storage_mode
-                or "leader")
-        storage = ReplicatedSimStorage(
-            sim, model, n_replicas=cfg.replication, seed=cfg.seed,
-            topology=cfg.topology, replica_regions=cfg.replica_regions,
-            placement=placement, mode=mode, batch=batch,
-            lease_ms=cfg.lease_ms, decisions=decisions)
+    # Storage goes through the unified store registry (core.stores): the
+    # builders pass EXACTLY the kwargs this function always passed to the
+    # constructors, so every simulated baseline stays bit-identical.
+    backend = cfg.store or ("replicated-sim"
+                            if cfg.replication > 1 or cfg.topology is not None
+                            else "sim")
+    mode = (cfg.storage_mode or proto_cls.preferred_storage_mode or "leader")
+    storage = build_store(StoreConfig(
+        backend=backend, model=model, seed=cfg.seed, batch=batch,
+        decisions=decisions, replication=cfg.replication,
+        topology=cfg.topology, replica_regions=cfg.replica_regions,
+        placement=placement, mode=mode, lease_ms=cfg.lease_ms), sim=sim)
+    if hasattr(storage, "fail_replica"):   # single-store backends: no-op
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
-    else:
-        storage = SimStorage(sim, model, seed=cfg.seed, batch=batch,
-                             decisions=decisions)
     # Timeouts must sit above the storage service's tail latency, or healthy
     # transactions get spuriously terminated (the paper's deployments tune
     # timeouts per service; we scale with the model's write latency, and in
@@ -278,7 +251,8 @@ def run_bench(workload_factory, model: LatencyModel,
         # saturated serial lane raises the effective timeouts instead of
         # feeding a termination storm; runs where the static timeouts
         # never fire are unchanged (the policy is raise-only).
-        policy = AdaptiveTimeouts(storage, seed=cfg.seed)
+        policy = AdaptiveTimeouts(storage, seed=cfg.seed,
+                                  per_lane=cfg.per_lane_timeouts)
     pcfg = ProtocolConfig(protocol=cfg.protocol,
                           rtt_ms=cfg.rtt_ms, elr=cfg.elr,
                           vote_timeout_ms=tmo, decision_timeout_ms=tmo,

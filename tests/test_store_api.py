@@ -1,0 +1,254 @@
+"""Unified store API: registry names, factory construction, the deprecated
+``make_store`` shim, and the per-lane adaptive-timeout policy the redesign
+threads through ``ProtocolConfig.timeout(kind, lane=...)``."""
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+from repro.core import (AZURE_REDIS, AdaptiveTimeouts, BatchConfig,
+                        BatchingStore, DecisionCacheConfig, EwmaStat,
+                        FileStore, LeaseKeeper, MemoryStore,
+                        QuorumUnavailable, ReplicatedSimStorage,
+                        ReplicatedStore, Sim, SimStorage, StoreConfig, Vote,
+                        build_store, get_store, make_store,
+                        registered_stores)
+from repro.core.stores import is_simulated
+
+ALL_ON = DecisionCacheConfig(cache=True, singleflight=True, push=True)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_registered_backends():
+    names = registered_stores()
+    for expected in ("memory", "file", "replicated", "sim",
+                     "replicated-sim"):
+        assert expected in names
+
+
+def test_unknown_backend_lists_registered():
+    with pytest.raises(KeyError) as ei:
+        get_store("redis")
+    msg = str(ei.value)
+    assert "redis" in msg and "memory" in msg and "replicated-sim" in msg
+
+
+def test_is_simulated():
+    assert is_simulated("sim") and is_simulated("replicated-sim")
+    assert not is_simulated("memory") and not is_simulated("replicated")
+
+
+# ---------------------------------------------------------------------------
+# Factory construction
+# ---------------------------------------------------------------------------
+def test_build_memory_and_control_plane():
+    plain = build_store(StoreConfig(backend="memory"))
+    assert isinstance(plain, MemoryStore) and plain.control is None
+    stormy = build_store(StoreConfig(backend="memory", decisions=ALL_ON))
+    assert stormy.control is not None
+    # Same observable counter surface as the sim services.
+    assert stormy.decision_cache_hits == 0
+    assert stormy.singleflight_hits == 0
+    assert stormy.decisions_pushed == 0
+
+
+def test_build_file_needs_root(tmp_path):
+    with pytest.raises(ValueError):
+        build_store(StoreConfig(backend="file"))
+    store = build_store(StoreConfig(backend="file", root=str(tmp_path)))
+    assert isinstance(store, FileStore)
+    assert store.log_once("h0", "t1", Vote.VOTE_YES, writer="h0") \
+        == Vote.VOTE_YES
+
+
+def test_build_replicated():
+    store = build_store(StoreConfig(backend="replicated", replication=5,
+                                    seed=11))
+    assert isinstance(store, ReplicatedStore) and store.n == 5
+
+
+def test_simulated_backends_require_sim():
+    with pytest.raises(ValueError):
+        build_store(StoreConfig(backend="sim"))
+    sim = Sim()
+    assert isinstance(build_store(StoreConfig(backend="sim"), sim=sim),
+                      SimStorage)
+    assert isinstance(
+        build_store(StoreConfig(backend="replicated-sim", model=AZURE_REDIS),
+                    sim=sim), ReplicatedSimStorage)
+
+
+def test_batching_wraps_threaded_backends():
+    store = build_store(StoreConfig(backend="memory", batching=True,
+                                    window_s=0.0, max_batch=8))
+    assert isinstance(store, BatchingStore)
+    assert isinstance(store.inner, MemoryStore)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated make_store shim
+# ---------------------------------------------------------------------------
+def test_make_store_warns_and_maps_legacy_kwargs():
+    with pytest.warns(DeprecationWarning, match="build_store"):
+        store = make_store("replicated", n_replicas=5, seed=2)
+    assert isinstance(store, ReplicatedStore) and store.n == 5
+
+
+def test_make_store_sim_window_ms():
+    sim = Sim()
+    with pytest.warns(DeprecationWarning):
+        store = make_store("sim", sim=sim, window_ms=2.0)
+    assert isinstance(store, SimStorage)
+    assert store.batch.window_ms == 2.0
+
+
+def test_make_store_threaded_window_s():
+    with pytest.warns(DeprecationWarning):
+        store = make_store("memory", window_s=0.001)
+    assert isinstance(store, BatchingStore)
+
+
+def test_make_store_rejects_unknown_kwargs():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="bogus"):
+            make_store("memory", bogus=1)
+
+
+# ---------------------------------------------------------------------------
+# Per-lane EWMAs / AdaptiveTimeouts (the global-dilution fix)
+# ---------------------------------------------------------------------------
+def test_ewma_stat_matches_legacy_update_law():
+    # dev updates against the PRE-update mean — the exact order the global
+    # write_lat_ewma/dev fields always used.
+    st = EwmaStat()
+    ewma, dev = None, 0.0
+    for ms in (4.0, 12.0, 2.0, 40.0, 7.5):
+        st.note(ms)
+        if ewma is None:
+            ewma, dev = ms, ms / 4.0
+        else:
+            dev = 0.75 * dev + 0.25 * abs(ms - ewma)
+            ewma = 0.75 * ewma + 0.25 * ms
+    assert st.ewma == pytest.approx(ewma)
+    assert st.dev == pytest.approx(dev)
+
+
+class _FakeLaneStorage:
+    """Storage stats double: one saturated lane, quiet global aggregate."""
+
+    write_lat_ewma = 1.0
+    write_lat_dev = 0.1
+
+    def lane_write_latency(self, lane):
+        return (400.0, 40.0) if lane == "hot" else None
+
+
+def test_per_lane_timeouts_isolate_the_hot_lane():
+    pol = AdaptiveTimeouts(_FakeLaneStorage(), jitter=0.0, per_lane=True)
+    base = 25.0
+    # Hot lane: raised by ITS EWMA (capped at 64x base).
+    hot = pol.timeout_ms("vote", base, lane="hot")
+    assert hot == pytest.approx(min(64.0 * base, 4.0 * 400.0 + 8.0 * 40.0))
+    # Never-observed lane: static floor, NOT the global aggregate and NOT
+    # the hot lane's congestion.
+    assert pol.timeout_ms("vote", base, lane="cold") == base
+    # No lane named: the service-global EWMA path, unchanged.
+    assert pol.timeout_ms("vote", base) == base  # 4*1+8*0.1 < base floor
+
+
+def test_global_ewma_dilution_regression():
+    """The bug the per-lane policy fixes: under zipf skew one hot lane's
+    queueing drowns in the many idle lanes' fast writes, so the GLOBAL
+    policy under-raises the hot lane's deadline.  Per-lane must raise the
+    hot lane's timeout strictly above the global policy's while keeping
+    cold lanes at the static floor."""
+    sim = Sim()
+    storage = SimStorage(sim, AZURE_REDIS, seed=0)
+    hot, cold = "p0", "p1"
+    # 1 slow hot write among many fast cold writes (zipf-ish mix) — drive
+    # the mixin's bookkeeping directly; stats are recorded per-lane
+    # unconditionally.
+    storage._note_write_latency(500.0, lane=hot)
+    for _ in range(50):
+        storage._note_write_latency(1.0, lane=cold)
+    base = 25.0
+    global_pol = AdaptiveTimeouts(storage, jitter=0.0)
+    lane_pol = AdaptiveTimeouts(storage, jitter=0.0, per_lane=True)
+    # Global EWMA was diluted toward the fast lane...
+    assert global_pol.timeout_ms("vote", base, lane=hot) < \
+        lane_pol.timeout_ms("vote", base, lane=hot)
+    # ...per-lane keeps the hot signal hot (hits the 64x cap here)...
+    assert lane_pol.timeout_ms("vote", base, lane=hot) == \
+        pytest.approx(64.0 * base)
+    # ...and the cold lane stays at its own (floor) deadline.
+    assert lane_pol.timeout_ms("vote", base, lane=cold) == base
+
+
+def test_sim_storage_records_lane_stats_unconditionally():
+    sim = Sim()
+    storage = SimStorage(sim, AZURE_REDIS, seed=0)
+    done = {}
+
+    def proc():
+        v = yield storage.log_once("pA", "t1", Vote.VOTE_YES, writer="pA")
+        done["v"] = v
+
+    sim.process(proc())
+    sim.run(until=10_000.0)
+    assert done["v"] == Vote.VOTE_YES
+    assert storage.lane_write_latency("pA") is not None
+    assert storage.lane_write_latency("pB") is None
+
+
+# ---------------------------------------------------------------------------
+# LeaseKeeper (automatic acquisition / renewal / degradation)
+# ---------------------------------------------------------------------------
+def test_lease_keeper_unsupported_store_is_slow_path():
+    keeper = LeaseKeeper(MemoryStore(), holder="h0")
+    assert not keeper.supported
+    assert keeper.ensure() is None and keeper.failures == 0
+
+
+def test_lease_keeper_acquires_and_reuses():
+    store = ReplicatedStore(n_replicas=3, seed=1)
+    keeper = LeaseKeeper(store, holder="h0", duration_s=60.0)
+    lease = keeper.ensure()
+    assert lease is not None and lease.holder == "h0"
+    assert keeper.acquisitions == 1
+    # Far from expiry: the SAME lease comes back, no second round.
+    assert keeper.ensure() is lease
+    assert keeper.acquisitions == 1 and keeper.renewals == 0
+
+
+def test_lease_keeper_renews_near_expiry():
+    store = ReplicatedStore(n_replicas=3, seed=1)
+    keeper = LeaseKeeper(store, holder="h0", duration_s=1e-4)
+    first = keeper.ensure()
+    assert first is not None
+    import time as _time
+    _time.sleep(2e-4)                    # expire it
+    second = keeper.ensure()
+    assert second is not None and second.epoch > first.epoch
+    assert keeper.renewals >= 1
+
+
+def test_lease_keeper_defers_to_live_peer():
+    store = ReplicatedStore(n_replicas=3, seed=1)
+    store.acquire_lease("peer", duration_s=60.0)
+    keeper = LeaseKeeper(store, holder="h0")
+    assert keeper.ensure() is None       # stealing would thrash epochs
+    assert keeper.acquisitions == 0
+
+
+def test_lease_keeper_degrades_on_quorum_loss():
+    store = ReplicatedStore(n_replicas=3, seed=1)
+    store.fail_replica(0)
+    store.fail_replica(1)
+    keeper = LeaseKeeper(store, holder="h0")
+    assert keeper.ensure() is None       # no quorum: degrade, don't raise
+    assert keeper.failures == 1
+    store.recover_replica(0)
+    assert keeper.ensure() is not None   # quorum back: fast path returns
