@@ -1,29 +1,45 @@
-"""Batched serving example (deliverable b): gemma2-style reduced model,
-8 requests served in waves of 4 with prefill + jitted decode and
-temperature sampling.
+"""Transactional serving example: sessions commit every decode step.
+
+Eight closed-loop clients stream inference sessions through the serving
+engine (``repro.serve``): steps coalesce in the continuous batcher, run a
+batched decode (the Pallas flash-decode kernel when jax is importable, a
+latency-modeled stub otherwise), and each step's KV-cache update COMMITS
+as a distributed transaction — here via Cornus, so a step costs one forced
+LogOnce vote per KV partition and nothing else.  Mid-run, a background
+publisher commits a checkpoint epoch through the same store while serving
+continues.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
-import numpy as np
-import jax
+from repro.serve import (AdmissionConfig, EngineConfig, SessionConfig,
+                         run_serve)
 
-from repro.configs import get_config
-from repro.launch.serve import BatchServer, Request, ServeConfig
-from repro.models import init_model, smoke
+cfg = EngineConfig(
+    session=SessionConfig(protocol="cornus", backend="replicated",
+                          replication=3, kv_partitions=8,
+                          participants_per_txn=2, service_delay_ms=1.0),
+    # Generous deadline: off-TPU the interpret-mode kernel costs ~1s per
+    # batch, and the example is about the commit path, not decode speed.
+    admission=AdmissionConfig(max_batch=4, window_ms=1.5,
+                              deadline_ms=30_000.0),
+    decode="auto",                 # pallas flash-decode if jax is present
+    # Small attention geometry: off-TPU the kernel runs in interpret mode,
+    # where big grids make an example crawl.
+    decode_kwargs=dict(slots=16, q_heads=2, kv_heads=1, head_dim=32,
+                       max_len=64, block_kv=32),
+    clients=8, steps_per_session=12,
+    publish_at=0.4, publish_until=0.8, publish_interval_s=0.2)
 
-cfg = smoke(get_config("gemma2-2b"))   # local/global attention + softcaps
-params = init_model(cfg, jax.random.key(0))
-server = BatchServer(cfg, params, batch_size=4,
-                     scfg=ServeConfig(max_new_tokens=24, temperature=0.8,
-                                      top_k=50, max_len=128))
-rng = np.random.RandomState(0)
-reqs = [Request(i, rng.randint(0, cfg.vocab_size, (12 + i % 5,))
-                .astype(np.int32)) for i in range(8)]
-out = server.serve(reqs)
-for rid in sorted(out)[:3]:
-    print(f"[serve] req {rid}: prompt {reqs[rid].prompt[:6]}... -> "
-          f"{out[rid][:10]}...")
-tput = server.stats["tokens"] / server.stats["wall_s"]
-print(f"[serve] {server.stats['requests']:.0f} requests, "
-      f"{server.stats['tokens']:.0f} tokens, {tput:.1f} tok/s, "
-      f"{server.stats['waves']:.0f} waves")
+result = run_serve(cfg)
+rep = result.report
+print(f"[serve] protocol={rep.protocol} committed={rep.committed} "
+      f"aborted={rep.aborted} dropped={rep.dropped}")
+print(f"[serve] tput={rep.throughput_tps:.1f} steps/s "
+      f"goodput={rep.goodput_tps:.1f}/s mean_batch={rep.mean_batch:.2f}")
+print(f"[serve] p50={rep.p50_ms:.2f}ms p99={rep.p99_ms:.2f}ms "
+      f"(tail amp {rep.tail_amplification:.2f}) "
+      f"ttft_p50={rep.ttft_p50_ms:.2f}ms")
+print(f"[serve] publishes={len(result.publishes)} "
+      f"(window tput ratio "
+      f"{rep.publish_disruption if rep.publish_disruption else 'n/a'}), "
+      f"fast_path_ops={result.counters['fast_path_ops']:.0f}")

@@ -7,10 +7,12 @@ durable — no coordinator decision record exists (paper §3.1), so a dead
 coordinator can never wedge the fleet, and any host (or a restarting job) can
 resolve an in-flight epoch in bounded time with the termination protocol.
 """
-from .shards import pack_tree, partition_leaves, unpack_tree
+from .shards import (ec_decode, ec_encode, pack_tree, partition_leaves,
+                     unpack_tree)
 from .commit import CheckpointOutcome, CornusCheckpointer
-from .restore import latest_committed, restore_params
+from .restore import fetch_payloads, latest_committed, restore_params
 
 __all__ = ["pack_tree", "unpack_tree", "partition_leaves",
+           "ec_encode", "ec_decode",
            "CornusCheckpointer", "CheckpointOutcome", "latest_committed",
-           "restore_params"]
+           "restore_params", "fetch_payloads"]

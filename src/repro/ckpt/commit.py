@@ -27,9 +27,10 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
-from ..core.control import LeaseKeeper
+from ..core.control import LeaseKeeper, QuorumUnavailable
 from ..core.state import Decision, Vote
 from ..core.storage import FileStore, MemoryStore
+from .shards import ec_encode
 
 
 @dataclass
@@ -45,18 +46,34 @@ def _txn(epoch: int) -> str:
     return f"e{epoch:012d}"
 
 
+def _ec_name(epoch: int) -> str:
+    # Distinct from the plain payload path: a store can hold both (e.g. a
+    # migration rewrites old epochs), and a restore tries plain first.
+    return f"{_txn(epoch)}.ec"
+
+
 class CornusCheckpointer:
     """One per host.  ``hosts`` lists every participant host id."""
 
     def __init__(self, store, host: str, hosts: Sequence[str],
                  straggler_timeout_s: float = 30.0,
                  poll_interval_s: float = 0.02,
-                 lease_duration_s: float = 5.0):
+                 lease_duration_s: float = 5.0,
+                 ec_k: Optional[int] = None):
         self.store = store
         self.host = host
         self.hosts = list(hosts)
         self.timeout = straggler_timeout_s
         self.poll = poll_interval_s
+        # k-of-n erasure coding of shard payloads: fragment i lands on
+        # replica volume i, so a committed epoch survives n-k lost volumes
+        # at n/k× storage instead of full replication's n×.  Needs a store
+        # with addressable replica volumes (the quorum-replicated store).
+        if ec_k is not None and not hasattr(store, "replicas"):
+            raise ValueError(
+                "ec_k needs a replicated store: fragments are placed one "
+                "per replica volume")
+        self.ec_k = ec_k
         # Leadership-lease upkeep: against a lease-capable store (the
         # replicated quorum store) the long-lived committer holds the epoch
         # ballot, so its LogOnce writes ride the phase-1-free fast path.
@@ -74,9 +91,23 @@ class CornusCheckpointer:
         return lease.holder if lease is not None else self.host
 
     # -- participant side ---------------------------------------------------
+    def _put_payload(self, epoch: int, payload: bytes) -> None:
+        if self.ec_k is None:
+            self.store.put_data(self.host, _txn(epoch), payload)
+            return
+        replicas = self.store.replicas
+        alive = self.store.alive_replicas()
+        if len(alive) < self.ec_k:
+            raise QuorumUnavailable(
+                f"{len(alive)}/{len(replicas)} volumes alive, erasure "
+                f"coding needs >= k={self.ec_k} fragments placed")
+        frags = ec_encode(payload, self.ec_k, len(replicas))
+        for r in alive:
+            r.put_data(self.host, _ec_name(epoch), frags[r.index])
+
     def vote(self, epoch: int, payload: bytes) -> Vote:
         """Upload this host's shards, then CAS the VOTE-YES."""
-        self.store.put_data(self.host, _txn(epoch), payload)
+        self._put_payload(epoch, payload)
         return self.store.log_once(self.host, _txn(epoch), Vote.VOTE_YES,
                                    writer=self._writer())
 

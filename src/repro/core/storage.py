@@ -533,6 +533,7 @@ class MemoryStore(_ControlledStoreMixin):
         # (partition, txn) -> (state, writer)
         self._state: Dict[Tuple[str, str], Tuple[Vote, str]] = {}
         self._data_bytes: Dict[str, int] = {}
+        self._payloads: Dict[Tuple[str, str], bytes] = {}
         self.cas_attempts = 0
         self.cas_losses = 0
         self._init_control(decisions)
@@ -583,6 +584,19 @@ class MemoryStore(_ControlledStoreMixin):
     def log_data(self, partition: str, nbytes: int) -> None:
         with self._lock:
             self._data_bytes[partition] = self._data_bytes.get(partition, 0) + nbytes
+
+    # -- bulk payloads (same surface as FileStore's data/ prefix) ----------
+    def put_data(self, partition: str, name: str, payload: bytes) -> None:
+        with self._lock:
+            self._payloads[(partition, name)] = bytes(payload)
+
+    def get_data(self, partition: str, name: str) -> bytes:
+        with self._lock:
+            try:
+                return self._payloads[(partition, name)]
+            except KeyError:
+                raise FileNotFoundError(f"no payload {partition}/{name}") \
+                    from None
 
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
         with self._lock:
@@ -1428,6 +1442,49 @@ class ReplicatedStore(_ControlledStoreMixin):
             if v is not None:
                 out[k] = v
         return out
+
+
+class DelayedMemoryStore(MemoryStore):
+    """MemoryStore whose store-side ops cost ``delay_s`` of service time.
+
+    The sleep sits INSIDE the op (under ``perform()`` for ``log_once``),
+    so a decision-cache hit — which never runs the op — skips it, and a
+    singleflight joiner shares one leader's delay instead of paying its
+    own.  Wall-clock harnesses (``repro.txn.threaded``, ``repro.serve``)
+    use this to make throughput a property of the protocol's forced-write
+    count rather than of the host machine."""
+
+    def __init__(self, delay_s: float,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+        super().__init__(decisions=decisions)
+        self._delay_s = delay_s
+
+    def _log_once_direct(self, partition, txn, state, writer=""):
+        time.sleep(self._delay_s)
+        return super()._log_once_direct(partition, txn, state, writer)
+
+    def log(self, partition, txn, state, writer=""):
+        time.sleep(self._delay_s)
+        return super().log(partition, txn, state, writer)
+
+
+class DelayedReplicatedStore(ReplicatedStore):
+    """ReplicatedStore with the same injected per-op service delay."""
+
+    def __init__(self, delay_s: float, n_replicas: int = 3, seed: int = 0,
+                 max_rounds: int = 256,
+                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+        super().__init__(n_replicas=n_replicas, seed=seed,
+                         max_rounds=max_rounds, decisions=decisions)
+        self._delay_s = delay_s
+
+    def _log_once_quorum(self, partition, txn, state, writer=""):
+        time.sleep(self._delay_s)
+        return super()._log_once_quorum(partition, txn, state, writer)
+
+    def log(self, partition, txn, state, writer=""):
+        time.sleep(self._delay_s)
+        return super().log(partition, txn, state, writer)
 
 
 class _Forward:

@@ -30,7 +30,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 from .control import DecisionCacheConfig
-from .storage import (AZURE_REDIS, BatchConfig, BatchingStore, FileStore,
+from .storage import (AZURE_REDIS, BatchConfig, BatchingStore,
+                      DelayedMemoryStore, DelayedReplicatedStore, FileStore,
                       LatencyModel, MemoryStore, RegionTopology,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage)
 
@@ -63,6 +64,11 @@ class StoreConfig:
     batching: bool = False
     window_s: float = 0.0
     max_batch: int = 64
+    # Injected per-op service time for wall-clock harnesses (memory /
+    # replicated backends only): the sleep sits inside the op, under the
+    # control plane, so cache hits and singleflight joiners skip it.
+    # 0 (the default) constructs the plain store — bit-identical.
+    service_delay_ms: float = 0.0
 
 
 _REGISTRY: Dict[str, Callable] = {}
@@ -121,6 +127,9 @@ def build_store(cfg: StoreConfig, sim=None):
 # --------------------------------------------------------------------------
 @register_store("memory")
 def _build_memory(cfg: StoreConfig, sim=None):
+    if cfg.service_delay_ms > 0:
+        return DelayedMemoryStore(cfg.service_delay_ms / 1e3,
+                                  decisions=cfg.decisions)
     return MemoryStore(decisions=cfg.decisions)
 
 
@@ -133,6 +142,12 @@ def _build_file(cfg: StoreConfig, sim=None):
 
 @register_store("replicated")
 def _build_replicated(cfg: StoreConfig, sim=None):
+    if cfg.service_delay_ms > 0:
+        return DelayedReplicatedStore(cfg.service_delay_ms / 1e3,
+                                      n_replicas=cfg.replication,
+                                      seed=cfg.seed,
+                                      max_rounds=cfg.max_rounds,
+                                      decisions=cfg.decisions)
     return ReplicatedStore(n_replicas=cfg.replication, seed=cfg.seed,
                            max_rounds=cfg.max_rounds,
                            decisions=cfg.decisions)

@@ -4,12 +4,19 @@ Wave-based batched serving: a request queue is drained in fixed-size batch
 waves; each wave prefills once and decodes step-by-step (greedy / temperature
 / top-k), stopping on EOS or max_new_tokens.  Per-wave cache buffers are
 donated across steps so decode runs in-place.
+
+DEPRECATED as a serving frontend: fixed waves admit nothing while a wave is
+in flight and give no backpressure, deadlines, or transactional session
+state.  ``repro.serve`` (``ServeEngine`` + ``ContinuousBatcher``) replaces
+the ad-hoc batching here; ``generate``/``_sample`` remain the reference
+prefill+decode loop and stay supported.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -77,10 +84,21 @@ class Request:
 
 
 class BatchServer:
-    """Drains a request queue in fixed-size waves (prompts padded per-wave)."""
+    """Deprecated shim: drains a request queue in fixed-size waves.
+
+    Kept working for old callers, but new code should drive
+    ``repro.serve.ServeEngine`` — continuous batching with a bounded
+    queue, deadlines, and per-step transactional commits — and use
+    ``generate`` directly for the model compute.
+    """
 
     def __init__(self, cfg: mc.ModelConfig, params, batch_size: int,
                  scfg: ServeConfig):
+        warnings.warn(
+            "BatchServer's fixed-wave batching is deprecated; use "
+            "repro.serve.ServeEngine (continuous batching + transactional "
+            "sessions) — see README 'Transactional serving'",
+            DeprecationWarning, stacklevel=2)
         self.cfg, self.params = cfg, params
         self.batch = batch_size
         self.scfg = scfg

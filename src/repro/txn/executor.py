@@ -29,7 +29,17 @@ from .store import LockMode, LockTable
 from .workload import Txn
 
 __all__ = ["AdaptiveTimeouts", "BenchConfig", "BenchResult",
-           "median_of_trials", "run_bench"]
+           "median_of_trials", "percentile", "run_bench"]
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """The percentile rule every bench result reports (nearest-rank on the
+    sorted sample, clamped) — shared so the serving SLO reports and the sim
+    ``BenchResult`` quote identical statistics."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(q * len(s)))]
 
 
 @dataclass
@@ -166,10 +176,7 @@ class BenchResult:
         return sum(xs) / len(xs) if xs else 0.0
 
     def _percentile(self, q: float) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
+        return percentile(self.latencies, q)
 
     @property
     def avg_latency_ms(self) -> float:

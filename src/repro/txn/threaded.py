@@ -37,16 +37,17 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.control import (DecisionCacheConfig, LeaseKeeper, STORM_CONTROL)
 from ..core.protocols import get_protocol
 from ..core.state import Vote
-from ..core.storage import MemoryStore, ReplicatedStore
+from ..core.storage import (DelayedMemoryStore, DelayedReplicatedStore,
+                            MemoryStore, ReplicatedStore)
 from ..core.variants import SIMULATED_RTT_ROWS
 
-__all__ = ["WallclockConfig", "WallclockResult", "run_wallclock",
-           "wallclock_rows", "WALLCLOCK_BACKENDS"]
+__all__ = ["WallclockConfig", "WallclockResult", "commit_txn",
+           "run_wallclock", "wallclock_rows", "WALLCLOCK_BACKENDS"]
 
 # Table-3 deployment → threaded backend: the "leader" rows run against the
 # single shared store, the "coloc" rows against the quorum-replicated one.
@@ -93,44 +94,53 @@ class WallclockResult:
         return self.commits / self.elapsed_s if self.elapsed_s > 0 else 0.0
 
 
-class _DelayedMemoryStore(MemoryStore):
-    """MemoryStore whose store-side ops cost ``delay_s`` of service time.
-
-    The sleep sits INSIDE the op (under ``perform()`` for ``log_once``),
-    so a decision-cache hit — which never runs the op — skips it, and a
-    singleflight joiner shares one leader's delay instead of paying its
-    own."""
-
-    def __init__(self, delay_s: float,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
-        super().__init__(decisions=decisions)
-        self._delay_s = delay_s
-
-    def _log_once_direct(self, partition, txn, state, writer=""):
-        time.sleep(self._delay_s)
-        return super()._log_once_direct(partition, txn, state, writer)
-
-    def log(self, partition, txn, state, writer=""):
-        time.sleep(self._delay_s)
-        return super().log(partition, txn, state, writer)
+# The delayed threaded stores now live in ``core.storage`` (shared with the
+# serving harness and constructible through the store factory); keep the
+# old private names importable.
+_DelayedMemoryStore = DelayedMemoryStore
+_DelayedReplicatedStore = DelayedReplicatedStore
 
 
-class _DelayedReplicatedStore(ReplicatedStore):
-    """ReplicatedStore with the same injected per-op service delay."""
+def commit_txn(store, proto, txn: str, coordinator: str,
+               participants: Sequence[str],
+               writer_for: Callable[[str], str] = lambda p: p,
+               before_vote: Optional[Callable[[int, str], None]] = None
+               ) -> bool:
+    """Replay one Table-3 commit choreography against a threaded store.
 
-    def __init__(self, delay_s: float, n_replicas: int = 3, seed: int = 0,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
-        super().__init__(n_replicas=n_replicas, seed=seed,
-                         decisions=decisions)
-        self._delay_s = delay_s
-
-    def _log_once_quorum(self, partition, txn, state, writer=""):
-        time.sleep(self._delay_s)
-        return super()._log_once_quorum(partition, txn, state, writer)
-
-    def log(self, partition, txn, state, writer=""):
-        time.sleep(self._delay_s)
-        return super().log(partition, txn, state, writer)
+    The storage write sequence is derived from the protocol strategy's
+    capability flags (the same flags the sim uses), so forced-write counts
+    per row match Table 3 — see the module docstring.  ``writer_for``
+    supplies the identity stamped on each write (a lease holder's for the
+    replicated fast path); ``before_vote(i, participant)`` runs before the
+    i-th vote write, which is where the wall-clock bench parks stragglers.
+    Returns True on COMMIT, False when a terminal record beat a vote.
+    """
+    if not proto.participant_logs:
+        # cl: one coordinator decision record, participants log nothing.
+        got = store.log_once(coordinator, txn, Vote.COMMIT,
+                             writer=writer_for(coordinator))
+        return got == Vote.COMMIT
+    outcome = None
+    for i, p in enumerate(participants):
+        if before_vote is not None:
+            before_vote(i, p)
+        if proto.vote_via_log_once:
+            got = store.log_once(p, txn, Vote.VOTE_YES,
+                                 writer=writer_for(p))
+        else:
+            got = store.log(p, txn, Vote.VOTE_YES, writer=writer_for(p))
+        if got != Vote.VOTE_YES:
+            outcome = got              # a terminal record beat the vote
+            break
+    if outcome is None:
+        if proto.eager_decision_record:
+            # 2PC: the commit record is the ground truth — forced before
+            # the caller hears COMMIT.
+            store.log(coordinator, txn, Vote.COMMIT,
+                      writer=writer_for(coordinator))
+        return True
+    return outcome == Vote.COMMIT
 
 
 class _StallBoard:
@@ -163,11 +173,11 @@ class _StallBoard:
 def _build_store(cfg: WallclockConfig):
     delay_s = cfg.service_delay_ms / 1e3
     if cfg.backend == "replicated":
-        return _DelayedReplicatedStore(delay_s, n_replicas=cfg.replication,
-                                       seed=cfg.seed,
-                                       decisions=cfg.decisions)
+        return DelayedReplicatedStore(delay_s, n_replicas=cfg.replication,
+                                      seed=cfg.seed,
+                                      decisions=cfg.decisions)
     if cfg.backend == "memory":
-        return _DelayedMemoryStore(delay_s, decisions=cfg.decisions)
+        return DelayedMemoryStore(delay_s, decisions=cfg.decisions)
     raise ValueError(f"unknown wallclock backend {cfg.backend!r}")
 
 
@@ -204,40 +214,19 @@ def run_wallclock(cfg: WallclockConfig) -> WallclockResult:
                  for i in range(npart)]
         straggle = bool(storm and seq % cfg.straggler_every ==
                         cfg.straggler_every - 1)
-        if not proto.participant_logs:
-            # cl: one coordinator decision record, participants log nothing.
-            got = store.log_once(coord, txn, Vote.COMMIT,
-                                 writer=writer_for(coord))
-            committed = got == Vote.COMMIT
-        else:
-            outcome = None
-            for i, p in enumerate(parts):
-                if straggle and i == len(parts) - 1:
-                    # Park before the last vote: terminators race ABORT
-                    # into this txn's slots while we sleep — and a watcher
-                    # sees the pushed decision (no polling).
-                    pushed: List[Vote] = []
-                    store.watch_decision(txn, pushed.append)
-                    board.park(txn, parts)
-                    time.sleep(cfg.straggler_delay_ms / 1e3)
-                if proto.vote_via_log_once:
-                    got = store.log_once(p, txn, Vote.VOTE_YES,
-                                         writer=writer_for(p))
-                else:
-                    got = store.log(p, txn, Vote.VOTE_YES,
-                                    writer=writer_for(p))
-                if got != Vote.VOTE_YES:
-                    outcome = got          # a terminal record beat the vote
-                    break
-            if outcome is None:
-                committed = True
-                if proto.eager_decision_record:
-                    # 2PC: the commit record is the ground truth — forced
-                    # before the caller hears COMMIT.
-                    store.log(coord, txn, Vote.COMMIT,
-                              writer=writer_for(coord))
-            else:
-                committed = outcome == Vote.COMMIT
+
+        def park(i: int, _p: str, txn=txn, parts=parts, straggle=straggle):
+            if straggle and i == len(parts) - 1:
+                # Park before the last vote: terminators race ABORT into
+                # this txn's slots while we sleep — and a watcher sees the
+                # pushed decision (no polling).
+                pushed: List[Vote] = []
+                store.watch_decision(txn, pushed.append)
+                board.park(txn, parts)
+                time.sleep(cfg.straggler_delay_ms / 1e3)
+
+        committed = commit_txn(store, proto, txn, coord, parts,
+                               writer_for=writer_for, before_vote=park)
         with res_lock:
             if committed:
                 res.commits += 1

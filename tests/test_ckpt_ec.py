@@ -1,0 +1,185 @@
+"""Erasure-coded checkpoint shards: codec, commit placement, restore.
+
+The headline property: a (k=2, n=5) epoch restores from TWO surviving
+replica volumes — a *minority* — including when volumes keep dying in the
+middle of the restore's per-host reads.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import threading
+
+import pytest
+
+from conftest import hypothesis_or_stubs
+
+HAS_HYPOTHESIS, given, settings, st = hypothesis_or_stubs()
+
+from repro.ckpt.commit import CornusCheckpointer
+from repro.ckpt.restore import fetch_payloads, latest_committed
+from repro.ckpt.shards import ec_decode, ec_encode
+from repro.core.control import QuorumUnavailable
+from repro.core.state import Decision
+from repro.core.storage import MemoryStore, ReplicatedStore
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+def test_every_k_subset_decodes():
+    payload = bytes(range(256)) * 5 + b"tail"
+    for k, n in [(1, 3), (2, 5), (3, 4), (4, 6)]:
+        frags = ec_encode(payload, k, n)
+        assert len(frags) == n
+        for subset in itertools.combinations(frags, k):
+            assert ec_decode(subset) == payload, (k, n)
+
+
+def test_codec_edge_payloads():
+    for payload in (b"", b"x", b"ab" * 1000):
+        frags = ec_encode(payload, 3, 5)
+        assert ec_decode(frags[2:]) == payload
+
+
+def test_storage_overhead_is_n_over_k():
+    payload = bytes(1200)
+    frags = ec_encode(payload, 3, 5)
+    body = len(frags[0]) - 15            # header is 15 bytes
+    assert body == 400                   # ceil(1200/3) per fragment
+
+
+def test_codec_rejects_bad_inputs():
+    frags = ec_encode(b"hello world", 3, 5)
+    with pytest.raises(ValueError, match="3 distinct"):
+        ec_decode(frags[:2])
+    with pytest.raises(ValueError, match="3 distinct"):
+        ec_decode([frags[0], frags[0], frags[0]])   # duplicates don't count
+    with pytest.raises(ValueError, match="magic"):
+        ec_decode([b"XXXX" + frags[0][4:]])
+    with pytest.raises(ValueError, match="truncated"):
+        ec_decode([frags[0][:4]])
+    other = ec_encode(b"hello world", 2, 5)
+    with pytest.raises(ValueError, match="geometries"):
+        ec_decode([frags[0], other[1], frags[2]])
+    with pytest.raises(ValueError):
+        ec_encode(b"x", 4, 3)            # k > n
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.binary(max_size=2048), st.integers(1, 6), st.integers(0, 5),
+       st.integers(0, 10_000))
+def test_codec_roundtrip_property(payload, k, extra, seed):
+    n = k + extra
+    frags = ec_encode(payload, k, n)
+    rng = random.Random(seed)
+    keep = rng.sample(frags, rng.randint(k, n))
+    assert ec_decode(keep) == payload
+
+
+# ---------------------------------------------------------------------------
+# Commit placement + restore under volume loss
+# ---------------------------------------------------------------------------
+def _commit_epoch(store, hosts, payloads, epoch, ec_k):
+    """All hosts vote concurrently (an epoch only commits collectively)."""
+    cks = {h: CornusCheckpointer(store, h, hosts, ec_k=ec_k,
+                                 straggler_timeout_s=5.0,
+                                 poll_interval_s=0.005) for h in hosts}
+    outs = {}
+    threads = [threading.Thread(
+        target=lambda h=h: outs.update({h: cks[h].save(epoch, payloads[h])}),
+        daemon=True) for h in hosts]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return outs
+
+
+def test_ec_epoch_commits_and_places_fragments_per_volume():
+    store = ReplicatedStore(n_replicas=5)
+    hosts = ["h0", "h1"]
+    payloads = {h: random.Random(h).randbytes(2000) for h in hosts}
+    outs = _commit_epoch(store, hosts, payloads, 3, ec_k=2)
+    assert all(o.decision == Decision.COMMIT for o in outs.values())
+    assert latest_committed(store, hosts) == 3
+    # One distinct fragment per replica volume, none holds the payload.
+    name = "e000000000003.ec"
+    bodies = {r.index: r.get_data("h0", name)[1] for r in store.replicas}
+    assert len(set(bodies.values())) == 5
+    assert all(len(b) < len(payloads["h0"]) for b in bodies.values())
+
+
+def test_restore_from_minority_with_volumes_dying_mid_restore():
+    store = ReplicatedStore(n_replicas=5)
+    hosts = ["h0", "h1", "h2"]
+    payloads = {h: random.Random(h).randbytes(3000) for h in hosts}
+    _commit_epoch(store, hosts, payloads, 7, ec_k=2)
+
+    # Kill THREE of five volumes between the first and second host read:
+    # the rest of the restore runs from a 2/5 minority.
+    def after_host(h):
+        if h == "h0":
+            for i in (0, 1, 2):
+                store.replicas[i].drop_data()
+
+    got = fetch_payloads(store, hosts, 7, after_host=after_host)
+    assert got == payloads
+
+
+def test_restore_fails_below_k_surviving_fragments():
+    store = ReplicatedStore(n_replicas=5)
+    hosts = ["h0"]
+    payloads = {"h0": b"q" * 1000}
+    _commit_epoch(store, hosts, payloads, 1, ec_k=3)
+    for i in (0, 1, 4):
+        store.replicas[i].drop_data()    # 2 fragments < k=3 survive
+    assert fetch_payloads(store, hosts, 1) == {}
+
+
+def test_vote_needs_k_placeable_fragments():
+    store = ReplicatedStore(n_replicas=5)
+    ck = CornusCheckpointer(store, "h0", ["h0"], ec_k=3)
+    for i in range(3):
+        store.fail_replica(i)            # 2 alive < k=3
+    with pytest.raises(QuorumUnavailable):
+        ck.vote(0, b"payload")
+
+
+def test_ec_requires_replicated_store():
+    with pytest.raises(ValueError, match="replicated"):
+        CornusCheckpointer(MemoryStore(), "h0", ["h0"], ec_k=2)
+
+
+def test_plain_epochs_still_restore_alongside_ec():
+    """Plain and EC epochs coexist: restore tries the plain path first."""
+    store = ReplicatedStore(n_replicas=5)
+    hosts = ["h0"]
+    _commit_epoch(store, hosts, {"h0": b"old" * 100}, 1, ec_k=None)
+    _commit_epoch(store, hosts, {"h0": b"new" * 100}, 2, ec_k=2)
+    assert fetch_payloads(store, hosts, 1) == {"h0": b"old" * 100}
+    assert fetch_payloads(store, hosts, 2) == {"h0": b"new" * 100}
+
+
+def test_restore_params_tree_from_minority():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.ckpt.restore import restore_params
+    from repro.ckpt.shards import pack_tree, partition_leaves
+
+    params = {"w": jnp.arange(12.0).reshape(3, 4),
+              "b": jnp.ones((7,)), "scale": jnp.asarray(2.5)}
+    hosts = ["h0", "h1"]
+    buckets = partition_leaves(params, len(hosts))
+    payloads = {h: pack_tree(params, keys)
+                for h, keys in zip(hosts, buckets)}
+    store = ReplicatedStore(n_replicas=5)
+    _commit_epoch(store, hosts, payloads, 9, ec_k=2)
+    for i in (1, 2, 3):
+        store.replicas[i].drop_data()
+    template = jax.tree_util.tree_map(jnp.zeros_like, params)
+    got = restore_params(store, hosts, 9, template)
+    for key in params:
+        np.testing.assert_array_equal(np.asarray(got[key]),
+                                      np.asarray(params[key]))
