@@ -1,0 +1,170 @@
+"""Elastic membership: live quorum reconfiguration under sustained load.
+
+Scales the replicated, group-committed deployment while a YCSB commit
+workload runs against it — membership changes are epoch bumps whose bulk
+``prepare_epoch`` carries the new config (Marlin-style), joiners catch up
+via recovery-driven state transfer before they count in quorums, and the
+lease hands over so the batched fast path survives the change:
+
+  steady    – R=3, no reconfiguration: the control arm (bit-identical to
+              the pre-elasticity store).
+  scaleout  – R 3→5 a third of the way in: two fresh joiners state-
+              transfer in the background, then one joint-quorum bump.
+  scalein   – R 5→3: the two highest member ids retire (their ids are
+              never reused, so their stale writes can never be chosen).
+  cycle     – R 3→5→3 in one run: scale-out then scale-in, serialized by
+              the store's single-flight reconfiguration guard.
+
+Per reconfiguration the store records (started, cutover, installed,
+old_n, new_n): started→cutover is non-disruptive background state
+transfer under the OLD config; cutover→installed is the disruptive
+window (the epoch bump + lease handover) and must stay under
+``DISRUPTION_BOUND_MS``.  The gate also holds the paper ordering
+(cornus ≥ 2pc per cell) and that every scheduled change completed with
+zero given-up transactions — no committed txn is lost across configs.
+
+Standalone entry point with a CI regression gate::
+
+    python -m benchmarks.elasticity --quick --check-baseline
+    python -m benchmarks.elasticity --quick --write-baseline
+
+The baseline (``BENCH_elastic.json`` at the repo root) pins quick-mode
+committed-txn throughput per cell; ``--check-baseline`` exits non-zero
+on a >15% throughput regression, a disruption window over the bound, an
+incomplete reconfiguration schedule, or inverted cornus/2pc ordering.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List
+
+from repro.core import AZURE_REDIS
+from repro.txn import BenchConfig, YCSBWorkload, run_bench
+
+from benchmarks._baseline import Row, gate_main, tracked
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_elastic.json")
+DISRUPTION_BOUND_MS = 25.0      # cutover -> installed, per config change
+TIMEOUT_MS = 60.0               # same tuned timeout as the failover bench
+
+# scenario -> (initial R, ((at_frac, new_R), ...))
+SCENARIOS = {
+    "steady":   (3, ()),
+    "scaleout": (3, ((1 / 3, 5),)),
+    "scalein":  (5, ((1 / 3, 3),)),
+    "cycle":    (3, ((1 / 3, 5), (2 / 3, 3))),
+}
+
+
+def _wl(nodes, seed):
+    return YCSBWorkload(nodes, accesses_per_txn=4, partition_theta=0.9,
+                        keys_per_partition=10_000, seed=seed)
+
+
+def run_one(proto: str, scenario: str, horizon_ms: float, seed: int = 3):
+    r0, schedule = SCENARIOS[scenario]
+    cfg = BenchConfig(protocol=proto, n_nodes=4, threads_per_node=8,
+                      horizon_ms=horizon_ms, replication=r0,
+                      seed=seed, storage_serial=True, batch_max=64,
+                      timeout_ms=TIMEOUT_MS,
+                      reconfigurations=tuple(
+                          (frac * horizon_ms, n) for frac, n in schedule))
+    return run_bench(_wl, AZURE_REDIS, cfg)
+
+
+def disruption_ms(res) -> float:
+    """Worst disruptive window across the run's config changes: epoch-bump
+    start (cutover) to new-config install, background transfer excluded."""
+    if not res.reconfig_history:
+        return 0.0
+    return max(installed - cutover
+               for (_started, cutover, installed, _o, _n)
+               in res.reconfig_history)
+
+
+def sweep(quick: bool = False) -> List[Row]:
+    protos = ("cornus", "2pc")
+    horizon = 600.0 if quick else 1500.0
+    rows: List[Row] = []
+    for proto in protos:
+        for scenario in SCENARIOS:
+            r = run_one(proto, scenario, horizon)
+            key = f"elastic/{proto}/{scenario}"
+            derived = (f"commits={r.commits} gaveups={r.gaveups} "
+                       f"reconfigs={len(r.reconfig_history)} "
+                       f"leases={r.lease_acquisitions} "
+                       f"degraded={r.lease_degradations} "
+                       f"fast={r.fast_path_ops} fallback={r.fallback_ops}")
+            rows.append((f"{key}/tput_tps", r.throughput_tps, derived))
+            rows.append((f"{key}/gaveups", float(r.gaveups),
+                         "txns abandoned after max_attempts (must be 0)"))
+            rows.append((f"{key}/reconfigs", float(len(r.reconfig_history)),
+                         f"completed config changes (scheduled "
+                         f"{len(SCENARIOS[scenario][1])})"))
+            if SCENARIOS[scenario][1]:
+                rows.append((f"{key}/disruption_ms", disruption_ms(r),
+                             f"worst cutover->install window; bound "
+                             f"{DISRUPTION_BOUND_MS}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Baseline gate (CI) — shared machinery in benchmarks/_baseline.py
+# ---------------------------------------------------------------------------
+def check_elasticity(rows: List[Row]) -> bool:
+    """Beyond the throughput floor: bounded disruption, completed
+    schedules, zero lost txns, and the paper ordering per cell."""
+    byname: Dict[str, float] = {name: value for name, value, _ in rows}
+    ok = True
+    for name, value in sorted(byname.items()):
+        if name.endswith("/disruption_ms"):
+            good = value <= DISRUPTION_BOUND_MS
+            verdict = "ok" if good else "DISRUPTION-UNBOUNDED"
+            print(f"# disruption {verdict}: {name} {value:.2f}ms "
+                  f"(bound {DISRUPTION_BOUND_MS})", file=sys.stderr)
+            ok = good and ok
+        elif name.endswith("/reconfigs"):
+            scenario = name.split("/")[-2]
+            want = float(len(SCENARIOS[scenario][1]))
+            good = value == want
+            verdict = "ok" if good else "RECONFIG-INCOMPLETE"
+            print(f"# schedule {verdict}: {name} {value:.0f}/{want:.0f}",
+                  file=sys.stderr)
+            ok = good and ok
+        elif name.endswith("/gaveups"):
+            good = value == 0.0
+            verdict = "ok" if good else "TXNS-LOST"
+            print(f"# gaveups {verdict}: {name} {value:.0f}",
+                  file=sys.stderr)
+            ok = good and ok
+    got = tracked(rows)
+    for name in sorted(got):
+        if "/cornus/" not in name:
+            continue
+        peer = name.replace("/cornus/", "/2pc/")
+        if peer not in got:
+            continue
+        good = got[name] >= got[peer] * (1.0 - 1e-9)
+        verdict = "ok" if good else "ORDERING-INVERTED"
+        if not good:
+            ok = False
+        print(f"# ordering {verdict}: {name} {got[name]:.1f} "
+              f"vs 2pc {got[peer]:.1f}", file=sys.stderr)
+    return ok
+
+
+def main() -> None:
+    gate_main(description=__doc__.splitlines()[0],
+              sweep=lambda quick: sweep(quick=quick),
+              baseline_path=BASELINE_PATH,
+              bench_name="benchmarks.elasticity --quick",
+              error_msg="elastic reconfiguration regressed against "
+                        "BENCH_elastic.json (throughput, disruption "
+                        "window, schedule completion, or ordering)",
+              extra_check=check_elasticity)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,16 +18,16 @@ from .control import (AdaptiveTimeouts, DecisionCacheConfig, DecisionIndex,
 from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       COMPUTE_RTT_MS, CROSS_REGION, CROSS_ZONE, INTRA_ZONE,
                       SLOW_REDIS, BatchConfig, BatchingStore, FileStore,
-                      GroupCommitIngress, LatencyModel, MemoryStore,
-                      RegionTopology, ReplicaLog,
+                      GroupCommitIngress, LatencyModel, MembershipConfig,
+                      MemoryStore, RegionTopology, ReplicaLog,
                       ReplicatedSimStorage, ReplicatedStore, SimStorage,
                       StoreLease, merge_reads)
-from .stores import (StoreConfig, build_store, get_store, make_store,
+from .stores import (StoreConfig, build_store, get_store,
                      register_store, registered_stores)
 from .protocols import (CommitProtocol, Transport, TxnContext, get_protocol,
                         register, registered_protocols)
 from .protocol import Cluster, ProtocolConfig
-from .variants import (SIMULATED_RTT_ROWS, CoordinatorLogCluster,
+from .variants import (SIMULATED_RTT_ROWS,
                        measured_caller_latency_ms,
                        predicted_caller_latency_ms, rtt_table)
 
@@ -35,17 +35,17 @@ __all__ = [
     "Sim", "Decision", "TxnOutcome", "TxnSpec", "Vote", "global_decision",
     "MemoryStore", "FileStore", "SimStorage", "LatencyModel",
     "AZURE_REDIS", "AZURE_BLOB", "AZURE_BLOB_SEPARATE_ACL", "SLOW_REDIS",
-    "COMPUTE_RTT_MS", "Cluster", "ProtocolConfig", "CoordinatorLogCluster",
+    "COMPUTE_RTT_MS", "Cluster", "ProtocolConfig",
     "CommitProtocol", "Transport", "TxnContext",
     "register", "get_protocol", "registered_protocols",
     "rtt_table", "predicted_caller_latency_ms", "measured_caller_latency_ms",
     "SIMULATED_RTT_ROWS",
     "RegionTopology", "INTRA_ZONE", "CROSS_ZONE", "CROSS_REGION",
     "ReplicatedStore", "ReplicatedSimStorage", "ReplicaLog", "merge_reads",
-    "QuorumUnavailable", "StoreLease",
+    "QuorumUnavailable", "StoreLease", "MembershipConfig",
     "BatchConfig", "BatchingStore", "GroupCommitIngress",
     "DecisionCacheConfig", "DecisionIndex", "AdaptiveTimeouts", "EwmaStat",
     "LeaseKeeper", "ThreadControlPlane",
-    "StoreConfig", "build_store", "get_store", "make_store",
+    "StoreConfig", "build_store", "get_store",
     "register_store", "registered_stores",
 ]

@@ -28,6 +28,7 @@ of these to a run in which they never fire cannot perturb it.
 """
 from __future__ import annotations
 
+import logging
 import random
 import threading
 import time
@@ -35,6 +36,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .state import Vote
+
+log = logging.getLogger(__name__)
 
 
 class QuorumUnavailable(RuntimeError):
@@ -397,6 +400,12 @@ class LeaseKeeper:
         path; it NEVER raises out of a renewal attempt.
       * safety is the store's (ballot order on the replicas); the keeper
         only decides when to spend an acquisition round.
+      * degradation is NOT silent: every ``ensure()`` that answers "slow
+        path" on a lease-capable store bumps ``degradations``, and the
+        fast↔slow transitions emit one log line each — so a bench (or an
+        operator) can assert the fast path actually re-engaged after a
+        failover or membership reconfiguration instead of quietly paying
+        full prepare+accept forever.
     """
 
     def __init__(self, store, holder: str, duration_s: float = 5.0,
@@ -410,6 +419,31 @@ class LeaseKeeper:
         self.acquisitions = 0
         self.renewals = 0
         self.failures = 0
+        self.degradations = 0          # ensure() calls answered "slow path"
+        self.reengagements = 0         # slow→fast transitions
+        self._degraded = False
+
+    def _slow(self, why: str):
+        """Record (and, on the transition, log) a slow-path answer."""
+        self.degradations += 1
+        if not self._degraded:
+            self._degraded = True
+            log.warning("LeaseKeeper[%s]: degraded to full-prepare "
+                        "slow path (%s)", self.holder, why)
+        return None
+
+    def _fast(self, lease):
+        if self._degraded:
+            self._degraded = False
+            self.reengagements += 1
+            log.info("LeaseKeeper[%s]: lease fast path re-engaged "
+                     "(epoch %d)", self.holder, lease.epoch)
+        return lease
+
+    @property
+    def degraded(self) -> bool:
+        """True while the last ``ensure()`` answered "slow path"."""
+        return self._degraded
 
     def ensure(self):
         """-> valid ``StoreLease`` held by ``holder``, or None (slow path)."""
@@ -421,21 +455,21 @@ class LeaseKeeper:
             if lease.holder == self.holder:
                 if lease.expires_at - now > self.renew_margin * \
                         self.duration_s:
-                    return lease
+                    return self._fast(lease)
             else:
                 # A live peer holds the lease: dueling epoch bumps would
                 # invalidate each other's fast path every round.  Let the
                 # holder serve; we take the (safe) full-prepare path.
-                return None
+                return self._slow(f"peer {lease.holder!r} holds the lease")
         try:
             lease = self.store.acquire_lease(self.holder,
                                              duration_s=self.duration_s)
-        except QuorumUnavailable:
+        except QuorumUnavailable as e:
             # Degrade, don't error: the committer falls back to the full
             # proposer, which is correct (just slower) lease or no lease.
             self.failures += 1
-            return None
+            return self._slow(f"acquisition failed: {e}")
         if self.acquisitions:
             self.renewals += 1
         self.acquisitions += 1
-        return lease
+        return self._fast(lease)

@@ -1090,6 +1090,10 @@ class ReplicaLog:
         with self._lock:
             return list(self._slots.keys())
 
+    def data_keys(self):
+        with self._lock:
+            return list(self._payloads.keys())
+
 
 def merge_reads(reads: Sequence[Tuple[Optional[Vote], int, bool]]):
     """Merge per-replica (value, gen, decided) into one view.
@@ -1129,6 +1133,50 @@ class StoreLease:
         return now < self.expires_at
 
 
+@dataclass(frozen=True)
+class MembershipConfig:
+    """One quorum-membership configuration of a replicated store.
+
+    Membership is a first-class, versioned object (Marlin-style): a config
+    change is an epoch bump whose bulk ``prepare_epoch`` carries the new
+    replica set, installed with a CAS on ``config_id`` — two concurrent
+    reconfigurations cannot both win.  ``replica_ids`` index into the
+    store's replica table; retired ids are never reused, so a removed
+    replica's volume can hold arbitrarily stale state without ever being
+    consulted (or counted toward a quorum) again.
+    """
+
+    config_id: int
+    replica_ids: Tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        ids = tuple(sorted(set(self.replica_ids)))
+        if not ids:
+            raise ValueError("membership needs at least one replica")
+        object.__setattr__(self, "replica_ids", ids)
+
+    @property
+    def n(self) -> int:
+        return len(self.replica_ids)
+
+    @property
+    def quorum(self) -> int:
+        return self.n // 2 + 1
+
+    def quorum_of(self, ids) -> bool:
+        """True when ``ids`` contains a majority of THIS config."""
+        members = set(self.replica_ids)
+        return sum(1 for i in ids if i in members) >= self.quorum
+
+
+# Bulk state-transfer streaming model (sim): a joiner pulls its catch-up
+# image as TRANSFER_STREAMS parallel chunk streams of TRANSFER_CHUNK
+# records each — wall time is one RTT plus ceil(n / (chunk*streams))
+# chunk-batched service times, NOT one log write per record.
+TRANSFER_CHUNK = 256
+TRANSFER_STREAMS = 8
+
+
 class ReplicatedStore(_ControlledStoreMixin):
     """Majority-quorum store over R ``ReplicaLog``s (threaded deployments).
 
@@ -1145,14 +1193,28 @@ class ReplicatedStore(_ControlledStoreMixin):
     for slots the writer does not own.  ``put_data``/``get_data`` replicate
     bulk shard payloads to every alive replica volume, so the checkpoint
     committer survives the loss of any minority of volumes.
+
+    Membership is elastic: ``reconfigure`` (and the ``add_replica`` /
+    ``remove_replica`` / ``set_replication`` conveniences) installs a new
+    ``MembershipConfig`` as an epoch bump — joiners first catch up via
+    recovery-driven state transfer (bulk slot + versioned ``put_data``
+    copy), then one bulk ``prepare_epoch`` carrying the new membership is
+    promised by a majority of the old AND the new config (joint quorum),
+    in-flight slots are completed under it, and the lease hands over to
+    the prior holder so the fast path survives the change.
     """
 
     def __init__(self, n_replicas: int = 3, seed: int = 0,
                  max_rounds: int = 256,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 membership: Optional[Sequence[int]] = None) -> None:
         assert n_replicas >= 1
-        self.replicas = [ReplicaLog(i) for i in range(n_replicas)]
-        self._alive = [True] * n_replicas
+        ids = (tuple(membership) if membership is not None
+               else tuple(range(n_replicas)))
+        self._membership = MembershipConfig(1, ids)
+        table = max(self._membership.replica_ids) + 1
+        self.replicas = [ReplicaLog(i) for i in range(table)]
+        self._alive = [True] * table
         self._gens: Dict[Tuple[str, str], int] = {}
         self._glock = threading.Lock()
         self._pids = itertools.count(1)
@@ -1169,15 +1231,25 @@ class ReplicatedStore(_ControlledStoreMixin):
         # round-1 accept there could contradict a possibly-chosen value);
         # the full proposer adopts the accepted value correctly.
         self._pinned: set = set()
+        # Reconfiguration bookkeeping: one change at a time (the lock), a
+        # full config history, and counters the benches surface.
+        self._reconfig_lock = threading.RLock()
+        self.membership_history: List[MembershipConfig] = [self._membership]
+        self.reconfigurations = 0
+        self.state_transfers = 0
         self._init_control(decisions)
 
     @property
+    def membership(self) -> MembershipConfig:
+        return self._membership
+
+    @property
     def n(self) -> int:
-        return len(self.replicas)
+        return self._membership.n
 
     @property
     def quorum(self) -> int:
-        return self.n // 2 + 1
+        return self._membership.quorum
 
     # -- replica liveness --------------------------------------------------
     def fail_replica(self, i: int) -> None:
@@ -1187,7 +1259,12 @@ class ReplicatedStore(_ControlledStoreMixin):
         self._alive[i] = True
 
     def alive_replicas(self) -> List[ReplicaLog]:
-        return [r for i, r in enumerate(self.replicas) if self._alive[i]]
+        m = self._membership
+        return [self.replicas[i] for i in m.replica_ids if self._alive[i]]
+
+    def alive_ids(self) -> List[int]:
+        m = self._membership
+        return [i for i in m.replica_ids if self._alive[i]]
 
     # -- quorum read -------------------------------------------------------
     def _read_merge(self, key):
@@ -1272,6 +1349,187 @@ class ReplicatedStore(_ControlledStoreMixin):
             return lease
         raise QuorumUnavailable(
             f"no lease after {self.max_rounds} rounds")
+
+    # -- elastic membership (versioned, CAS-installed config changes) ------
+    def _state_transfer(self, i: int, donors_ids: Sequence[int]) -> int:
+        """Recovery-driven catch-up: bulk-copy the donors' merged slot
+        state and their freshest payload versions onto replica ``i`` —
+        a full image push with versioned cutover, not lazy read repair.
+        Returns the number of records moved."""
+        donors = [self.replicas[j] for j in donors_ids
+                  if self._alive[j] and j != i]
+        target = self.replicas[i]
+        moved = 0
+        keys = set()
+        for d in donors:
+            keys.update(d.keys())
+        for k in keys:
+            v, g, dec = merge_reads([d.read(k) for d in donors])
+            if v is not None or dec:
+                target.repair(k, v, g, dec)
+                moved += 1
+        pkeys = set()
+        for d in donors:
+            pkeys.update(d.data_keys())
+        for (partition, name) in pkeys:
+            best: Optional[Tuple[int, bytes]] = None
+            for d in donors:
+                got = d.get_data(partition, name)
+                if got is not None and (best is None or got[0] > best[0]):
+                    best = got
+            if best is not None:
+                # put_data keeps the max version, so a racing rewrite with
+                # a higher version is never clobbered (versioned cutover).
+                target.put_data(partition, name, best[1], version=best[0])
+                moved += 1
+        self.state_transfers += 1
+        return moved
+
+    def revive_replica(self, i: int) -> int:
+        """Bring a crashed member back AND restore its volume through the
+        same recovery-driven state transfer a joiner gets.  Plain
+        ``recover_replica`` models a crash (disk intact, lazy read repair
+        fills gaps); revive models a replacement volume that must not
+        serve stale state before it caught up."""
+        self._alive[i] = True
+        return self._state_transfer(i, self._membership.replica_ids)
+
+    def reconfigure(self, new_ids: Sequence[int], holder: str = "",
+                    duration_s: float = 5.0) -> MembershipConfig:
+        """Install a new membership as an epoch bump.
+
+        Sequence: grow the replica table for joiners → state-transfer the
+        old config's image onto each joiner → one bulk ``prepare_epoch``
+        promised by a majority of the old AND new config (the epoch bump
+        that carries the new membership) → complete in-flight undecided
+        slots under it → CAS-install the ``MembershipConfig`` (config_id
+        + 1) and hand the lease to ``holder`` (default: the prior valid
+        leaseholder) so the fast path survives the change.
+
+        Safety: any two old-config majorities intersect, so a proposer
+        still running on a pre-bump ballot meets a promoted replica and
+        falls back; retired replicas are no longer read, repaired, or
+        counted toward any quorum, so their stale writes can never be
+        chosen under the new config.
+        """
+        with self._reconfig_lock:
+            old = self._membership
+            new = MembershipConfig(old.config_id + 1, tuple(new_ids))
+            if new.replica_ids == old.replica_ids:
+                return old
+            with self._glock:
+                for i in new.replica_ids:
+                    while len(self.replicas) <= i:
+                        self.replicas.append(ReplicaLog(len(self.replicas)))
+                        self._alive.append(True)
+            joiners = [i for i in new.replica_ids
+                       if i not in old.replica_ids]
+            for i in joiners:
+                self._state_transfer(i, old.replica_ids)
+            if not holder:
+                lease = self.current_lease()
+                holder = lease.holder if lease is not None else "reconfig"
+            lease = self._joint_epoch_bump(old, new, holder, duration_s)
+            # Delta pass: slots decided between the image copy and the
+            # bump reached only old members; close the gap before the
+            # joiners start counting toward read quorums.
+            for i in joiners:
+                self._state_transfer(i, old.replica_ids)
+            with self._glock:
+                if self._membership.config_id != old.config_id:
+                    # CAS failed: somebody else installed concurrently
+                    # (cannot happen under _reconfig_lock; kept as the
+                    # invariant the install is defined by).
+                    raise QuorumUnavailable("membership CAS lost")
+                self._membership = new
+                self.membership_history.append(new)
+                cur = self._lease
+                if cur is None or lease.ballot > cur.ballot:
+                    self._lease = lease     # lease handover across configs
+            self.reconfigurations += 1
+            return new
+
+    def _joint_epoch_bump(self, old: MembershipConfig,
+                          new: MembershipConfig, holder: str,
+                          duration_s: float) -> StoreLease:
+        """One bulk prepare over the union of both configs, requiring a
+        majority of EACH; in-flight undecided slots are re-proposed at the
+        new ballot in both quorums (the Multi-Paxos recovery obligation,
+        joint so neither config can contradict the completion)."""
+        union_ids = sorted(set(old.replica_ids) | set(new.replica_ids))
+        with self._glock:
+            epoch = self._lease.epoch if self._lease is not None else 1
+        for attempt in range(self.max_rounds):
+            alive = [i for i in union_ids if self._alive[i]]
+            if not (old.quorum_of(alive) and new.quorum_of(alive)):
+                raise QuorumUnavailable(
+                    "joint quorum unreachable for reconfiguration")
+            epoch += 1
+            ballot: Ballot = (epoch, 1, next(self._pids))
+            ok_ids: List[int] = []
+            inflight: Dict[Tuple[str, str], Tuple[Ballot, Vote]] = {}
+            for i in alive:
+                ok, promised, acc = self.replicas[i].prepare_epoch(ballot)
+                if ok:
+                    ok_ids.append(i)
+                    for key, ab, av in acc:
+                        cur = inflight.get(key)
+                        if cur is None or ab > cur[0]:
+                            inflight[key] = (ab, av)
+                else:
+                    epoch = max(epoch, promised[0])
+            if not (old.quorum_of(ok_ids) and new.quorum_of(ok_ids)):
+                time.sleep(self._rng.random() * 1e-4 * (attempt + 1))
+                continue
+            for key, (_ab, av) in sorted(inflight.items()):
+                acks = [i for i in union_ids
+                        if self._alive[i]
+                        and self.replicas[i].accept(key, ballot, av)]
+                if old.quorum_of(acks) and new.quorum_of(acks):
+                    for i in union_ids:
+                        if self._alive[i]:
+                            self.replicas[i].learn(key, av)
+                    self._pinned.discard(key)
+                else:
+                    self._pinned.add(key)
+            self.lease_acquisitions += 1
+            return StoreLease(epoch, holder, ballot,
+                              time.monotonic() + duration_s)
+        raise QuorumUnavailable(
+            f"no joint epoch bump after {self.max_rounds} rounds")
+
+    def add_replica(self, holder: str = "") -> int:
+        """Grow the quorum by one fresh replica (never a retired id);
+        returns the new replica's index."""
+        with self._reconfig_lock:
+            new_id = len(self.replicas)
+            self.reconfigure(self._membership.replica_ids + (new_id,),
+                             holder=holder)
+            return new_id
+
+    def remove_replica(self, i: int, holder: str = "") -> MembershipConfig:
+        """Retire member ``i``: its volume stays on disk but it leaves the
+        replica set permanently (retired ids are never reused)."""
+        with self._reconfig_lock:
+            ids = tuple(j for j in self._membership.replica_ids if j != i)
+            if len(ids) == self._membership.n:
+                raise ValueError(f"replica {i} is not a member")
+            return self.reconfigure(ids, holder=holder)
+
+    def set_replication(self, n: int, holder: str = "") -> MembershipConfig:
+        """Scale the replica set to ``n``: grows with fresh replicas,
+        shrinks from the highest member ids (never the leader-colocated
+        lowest member)."""
+        assert n >= 1
+        with self._reconfig_lock:
+            ids = list(self._membership.replica_ids)
+            if len(ids) > n:
+                ids = ids[:n]
+            nxt = len(self.replicas)
+            while len(ids) < n:
+                ids.append(nxt)
+                nxt += 1
+            return self.reconfigure(tuple(ids), holder=holder)
 
     # -- operations --------------------------------------------------------
     def log_once(self, partition: str, txn: str, state: Vote,
@@ -1429,16 +1687,18 @@ class ReplicatedStore(_ControlledStoreMixin):
                                 f"{partition}/{name}")
 
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
-        """Merged view over every replica's disk — ground truth for tests
-        and recovery tooling.  Deliberately includes down replicas (crash,
-        not amnesia): a quorum-committed record must show up even while the
-        replicas that hold it are offline."""
+        """Merged view over every MEMBER replica's disk — ground truth for
+        tests and recovery tooling.  Deliberately includes down members
+        (crash, not amnesia): a quorum-committed record must show up even
+        while the replicas that hold it are offline.  Retired (removed)
+        replicas are excluded — their stale writes can never be chosen."""
+        members = [self.replicas[i] for i in self._membership.replica_ids]
         keys = set()
-        for r in self.replicas:
+        for r in members:
             keys.update(r.keys())
         out = {}
         for k in keys:
-            v, _, _ = merge_reads([r.read(k) for r in self.replicas])
+            v, _, _ = merge_reads([r.read(k) for r in members])
             if v is not None:
                 out[k] = v
         return out
@@ -1473,9 +1733,11 @@ class DelayedReplicatedStore(ReplicatedStore):
 
     def __init__(self, delay_s: float, n_replicas: int = 3, seed: int = 0,
                  max_rounds: int = 256,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 membership: Optional[Sequence[int]] = None) -> None:
         super().__init__(n_replicas=n_replicas, seed=seed,
-                         max_rounds=max_rounds, decisions=decisions)
+                         max_rounds=max_rounds, decisions=decisions,
+                         membership=membership)
         self._delay_s = delay_s
 
     def _log_once_quorum(self, partition, txn, state, writer=""):
@@ -1543,8 +1805,8 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
     """Quorum-replicated storage service inside the discrete-event sim.
 
     Drop-in for ``SimStorage``: ``log_once`` / ``log`` / ``read_state`` /
-    ``log_batch`` return sim Events, so ``Cluster`` / ``CoordinatorLogCluster``
-    run unmodified against it.  R replica endpoints each have a region (RTTs
+    ``log_batch`` return sim Events, so ``Cluster`` (any registered
+    protocol) runs unmodified against it.  R replica endpoints each have a region (RTTs
     from ``RegionTopology``), the shared ``LatencyModel`` service times, and a
     per-replica fail/recover schedule; a request completes on the *quorum-th*
     fastest acknowledgement, not the slowest replica.
@@ -1577,12 +1839,24 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                  op_timeout_ms: Optional[float] = None,
                  batch: Optional[BatchConfig] = None,
                  lease_ms: float = 200.0,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 membership: Optional[Sequence[int]] = None) -> None:
         assert mode in ("leader", "coloc")
         self.sim = sim
         self.model = model
-        self.n = n_replicas
-        self.quorum = n_replicas // 2 + 1
+        # Membership is versioned and elastic: ``member_ids`` (ascending)
+        # is the CURRENT replica set; the table arrays below are indexed
+        # by replica id and only ever grow (retired ids keep their state
+        # but are never consulted again).  Without reconfiguration the
+        # members are exactly range(n_replicas) in the same order every
+        # loop always iterated — bit-identical.
+        self.membership = MembershipConfig(
+            1, tuple(membership) if membership is not None
+            else tuple(range(n_replicas)))
+        assert all(i < n_replicas for i in self.membership.replica_ids)
+        self.member_ids: List[int] = list(self.membership.replica_ids)
+        self.n = self.membership.n
+        self.quorum = self.membership.quorum
         self.topology = topology or INTRA_ZONE
         regs = self.topology.regions
         self.replica_regions = (list(replica_regions) if replica_regions
@@ -1628,6 +1902,20 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         # property tests assert exactly one holder per epoch (in coloc,
         # epoch 1 has one holder per partition owner by construction).
         self.fast_ops_by_epoch: Dict[int, Dict] = {}
+        # Elastic-membership accounting: (started_ms, cutover_ms,
+        # installed_ms, old_n, new_n) per completed config change —
+        # started→cutover is background state transfer (old config keeps
+        # serving), cutover→installed is the disruptive epoch bump the
+        # elasticity bench bounds; plus slots/payloads moved by state
+        # transfer and ops that WANTED the lease fast path but had to
+        # degrade to the full proposer (the silent-degradation signal
+        # benches assert re-engages after a change).
+        self.reconfig_history: List[
+            Tuple[float, float, float, int, int]] = []
+        self.reconfigurations = 0
+        self.state_transfers = 0
+        self.lease_degradations = 0
+        self._reconfiguring = None     # single-flight config-change event
         self._init_decisions(decisions, seed)
 
     # -- replica liveness (sim-time schedules, like Cluster nodes) ---------
@@ -1641,7 +1929,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         return t < self.fail_at[i] or t >= self.recover_at[i]
 
     def _leader_idx(self) -> Optional[int]:
-        for i in range(self.n):
+        for i in self.member_ids:
             if self.replica_alive(i):
                 return i
         return None
@@ -1775,9 +2063,232 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                 self.sim.now):
             self.lease_expiries += 1
 
+    # -- elastic membership (live reconfiguration) -------------------------
+    def schedule_reconfigure(self, at_ms: float, n_replicas: int,
+                             regions: Optional[Sequence[str]] = None
+                             ) -> None:
+        """Arm a live membership change at sim time ``at_ms``: the store
+        scales to ``n_replicas`` members (growing with fresh joiners, or
+        retiring the highest member ids).  Nothing is scheduled into the
+        event stream before ``at_ms`` — runs without reconfiguration are
+        untouched."""
+        delay = max(0.0, at_ms - self.sim.now)
+        self.sim.timer(delay, lambda: self.sim.process(
+            self._reconfigure_proc(n_replicas, regions)))
+
+    def _sim_copy_image(self, src_ids: Sequence[int], j: int) -> int:
+        """Instant-apply bulk image copy onto replica ``j`` (the caller
+        charges the batched round-trip time): merged slots via repair,
+        payloads at their freshest version (versioned cutover)."""
+        donors = [self.replicas[i] for i in src_ids
+                  if self.replica_alive(i) and i != j]
+        target = self.replicas[j]
+        moved = 0
+        keys = set()
+        for d in donors:
+            keys.update(d.keys())
+        for k in keys:
+            v, g, dec = merge_reads([d.read(k) for d in donors])
+            if v is not None or dec:
+                target.repair(k, v, g, dec)
+                moved += 1
+        pkeys = set()
+        for d in donors:
+            pkeys.update(d.data_keys())
+        for (partition, name) in pkeys:
+            best: Optional[Tuple[int, bytes]] = None
+            for d in donors:
+                got = d.get_data(partition, name)
+                if got is not None and (best is None or got[0] > best[0]):
+                    best = got
+            if best is not None:
+                target.put_data(partition, name, best[1], version=best[0])
+                moved += 1
+        self.state_transfers += 1
+        return moved
+
+    def _reconfigure_proc(self, n_new: int,
+                          regions: Optional[Sequence[str]] = None):
+        """Serialize config changes: a second scheduled change waits for
+        the in-flight one to install, then runs against the NEW config
+        (scale 3→5→3 is two complete changes, not a lost update)."""
+        while self._reconfiguring is not None:
+            yield self._reconfiguring
+        ev = self._reconfiguring = self.sim.event()
+        try:
+            yield from self._reconfigure_body(n_new, regions)
+        finally:
+            self._reconfiguring = None
+            ev.trigger(None)
+
+    def _reconfigure_body(self, n_new: int,
+                          regions: Optional[Sequence[str]] = None):
+        """Generator process driving one config change end to end:
+
+          1. grow the replica table for joiners and push each a bulk
+             state-transfer image (ONE batched round trip per joiner —
+             recovery-driven, not lazy read repair);
+          2. epoch bump carrying the new membership: one bulk
+             ``prepare_epoch`` over the UNION of both configs, promised by
+             a majority of the old AND the new set (joint quorum), with
+             in-flight undecided slots completed at the new ballot under
+             the same joint rule;
+          3. delta-copy anything decided during the transfer, then the
+             versioned cutover: install the new ``MembershipConfig`` and
+             hand the lease to the new config's leader at the bump ballot
+             — the group-commit fast path survives the change.
+
+        The disruption window ``reconfig_history`` records spans from the
+        change starting to the new config serving fast-path ops."""
+        started = self.sim.now
+        old = self.membership
+        old_ids = list(self.member_ids)
+        new_ids = list(old_ids)
+        joiners: List[int] = []
+        if n_new > len(old_ids):
+            regs = self.topology.regions
+            for k in range(n_new - len(old_ids)):
+                i = len(self.replicas)
+                self.replicas.append(ReplicaLog(i))
+                self.replica_regions.append(
+                    regions[k] if regions is not None
+                    else regs[i % len(regs)])
+                self.fail_at.append(float("inf"))
+                self.recover_at.append(float("inf"))
+                new_ids.append(i)
+                joiners.append(i)
+        elif n_new < len(old_ids):
+            new_ids = old_ids[:n_new]     # retire the highest member ids
+        if new_ids == old_ids:
+            return
+        new = MembershipConfig(old.config_id + 1, tuple(new_ids))
+        old_set, new_set = set(old_ids), set(new_ids)
+        oq = len(old_ids) // 2 + 1
+        nq = len(new_ids) // 2 + 1
+
+        def joint(ok_ids) -> bool:
+            return (sum(1 for i in ok_ids if i in old_set) >= oq
+                    and sum(1 for i in ok_ids if i in new_set) >= nq)
+
+        union = sorted(old_set | new_set)
+        driver = None
+        while driver is None:
+            # The new config's leader drives the change (and inherits the
+            # lease); with none alive, wait out the outage like _via_leader.
+            driver = next((i for i in new_ids
+                           if self.replica_alive(i)), None)
+            if driver is None:
+                yield self.sim.timeout(self.op_timeout_ms)
+        src = self.replica_regions[driver]
+        if joiners:
+            # Joiners pull the image CONCURRENTLY, each as a pipelined
+            # chunk stream (catch-up is bulk streaming, not one log write
+            # per record): wall time per joiner = one RTT + the number of
+            # chunk rounds at the chunk's batched service time.  Sized off
+            # the leader's slot count at transfer start, so the charge
+            # does not chase foreground writes landing mid-copy.
+            n_items = max(1, len(self.replicas[old_ids[0]].keys()))
+            rounds = -(-n_items // (TRANSFER_CHUNK * TRANSFER_STREAMS))
+            waits = []
+            for j in joiners:
+                dur = (self.topology.rtt_ms(src, self.replica_regions[j])
+                       + rounds * self.model.sample(
+                           self.rng, self.model.batched_write_ms(
+                               TRANSFER_CHUNK, self.model.plain_write_ms)))
+                waits.append(self.sim.timeout(dur))
+            yield self.sim.all_of(waits)
+            for j in joiners:
+                self._sim_copy_image(old_ids, j)
+        # The epoch bump is the DISRUPTIVE part (cutover→installed): hold
+        # the lease single-flight so no concurrent acquisition can install
+        # a stale-config lease over the bump's, and so callers waiting on
+        # a lease re-check after the new config is in.
+        while self._acquiring is not None:
+            yield self._acquiring
+        acq_ev = self._acquiring = self.sim.event()
+        cutover = self.sim.now
+        epoch = self._lease.epoch
+        attempt = 0
+        while True:
+            if not self.replica_alive(driver):
+                driver = next((i for i in new_ids
+                               if self.replica_alive(i)), None)
+                if driver is None:
+                    yield self.sim.timeout(self.op_timeout_ms)
+                    continue
+                src = self.replica_regions[driver]
+            epoch += 1
+            ballot: Ballot = (epoch, 1, driver)
+            resps = yield self._scatter(
+                src, lambda r, i, b=ballot: r.prepare_epoch(b),
+                self.model.read_ms,
+                lambda rs: joint([i for i, (ok, *_r) in rs if ok]),
+                driver, ids=union)
+            ok_ids: List[int] = []
+            inflight: Dict[Tuple[str, str], Tuple[Ballot, Vote]] = {}
+            for i, (ok, promised, acc) in resps:
+                if ok:
+                    ok_ids.append(i)
+                    for key, ab, av in acc:
+                        cur = inflight.get(key)
+                        if cur is None or ab > cur[0]:
+                            inflight[key] = (ab, av)
+                else:
+                    epoch = max(epoch, promised[0])
+            if not joint(ok_ids):
+                attempt += 1
+                yield self.sim.timeout(self._backoff(attempt))
+                continue
+            if inflight:
+                keys = sorted(inflight)
+
+                def apply_recover(r: ReplicaLog, i: int,
+                                  keys=keys, ballot=ballot):
+                    return [r.accept(k, ballot, inflight[k][1])
+                            for k in keys]
+
+                def recovered(resps) -> bool:
+                    return all(joint([i for i, vals in resps if vals[idx]])
+                               for idx in range(len(keys)))
+
+                resps = yield self._scatter(
+                    src, apply_recover,
+                    self.model.batched_write_ms(
+                        len(keys), self.model.conditional_write_ms),
+                    recovered, driver, ids=union)
+                for idx, k in enumerate(keys):
+                    if joint([i for i, vals in resps if vals[idx]]):
+                        self._cast(src,
+                                   lambda r, i, k=k: r.learn(
+                                       k, inflight[k][1]),
+                                   self.model.plain_write_ms, driver,
+                                   ids=union)
+                        self._pinned.discard(k)
+                    else:
+                        self._pinned.add(k)
+            break
+        for j in joiners:
+            self._sim_copy_image(old_ids, j)   # delta since the bulk copy
+        self.membership = new
+        self.member_ids = list(new.replica_ids)
+        self.n = new.n
+        self.quorum = new.quorum
+        self._lease = StoreLease(epoch, driver, ballot,
+                                 self.sim.now + self.lease_ms)
+        self.lease_acquisitions += 1
+        self.lease_history.append((epoch, driver, self.sim.now))
+        self.sim.timer(self.lease_ms,
+                       lambda epoch=epoch: self._note_expiry(epoch))
+        self._acquiring = None
+        acq_ev.trigger(None)
+        self.reconfigurations += 1
+        self.reconfig_history.append(
+            (started, cutover, self.sim.now, len(old_ids), len(new_ids)))
+
     # -- scatter/gather RPC layer ------------------------------------------
     def _scatter(self, src_region: str, fn, mean_ms: float, done_pred,
-                 self_idx: Optional[int] = None, also=None):
+                 self_idx: Optional[int] = None, also=None,
+                 ids: Optional[Sequence[int]] = None):
         """Send ``fn(replica, i)`` to every replica; the returned Event
         triggers with [(i, result), ...] once ``done_pred`` is satisfied,
         all replicas answered, or ``op_timeout_ms`` elapsed.  A replica dead
@@ -1795,10 +2306,15 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         park the caller (and, under group commit, the partition's serial
         lane) on every round whose predicate cannot be met, which is
         exactly the post-failover stall the leases exist to remove.  With
-        no failures every replica answers, so the timing is unchanged."""
+        no failures every replica answers, so the timing is unchanged.
+
+        ``ids`` overrides the target set (reconfiguration rounds scatter
+        over the union of old and new members); the default is the current
+        membership."""
         done = self.sim.event()
         acc = {"resps": [], "count": 0}
         self.round_trips += 1
+        targets = list(self.member_ids) if ids is None else list(ids)
         fwd_by_region: Dict[str, List] = {}
         if also is not None:
             pairs = also if isinstance(also, list) else [also]
@@ -1809,7 +2325,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
             if not done.triggered and ready:
                 done.trigger(list(acc["resps"]))
 
-        for i in range(self.n):
+        for i in targets:
             net = (0.0 if i == self_idx
                    else self.topology.rtt_ms(
                        src_region, self.replica_regions[i]) / 2.0)
@@ -1825,7 +2341,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                     acc["count"] += 1
                     answered = {j for j, _ in acc["resps"]}
                     alive_pending = any(
-                        self.replica_alive(j) for j in range(self.n)
+                        self.replica_alive(j) for j in targets
                         if j not in answered)
                     finish_if(done_pred(acc["resps"])
                               or not alive_pending)
@@ -1846,9 +2362,10 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
 
     def _cast(self, src_region: str, fn, mean_ms: float,
               self_idx: Optional[int] = None,
-              only: Optional[Sequence[int]] = None) -> None:
+              only: Optional[Sequence[int]] = None,
+              ids: Optional[Sequence[int]] = None) -> None:
         """Fire-and-forget apply (learn / read-repair pushes)."""
-        for i in range(self.n):
+        for i in (self.member_ids if ids is None else ids):
             if only is not None and i not in only:
                 continue
             net = (0.0 if i == self_idx
@@ -2081,7 +2598,10 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                     has_lease = yield from self._ensure_lease(li)
                 if not has_lease:
                     # No alive leaseholder: batch guarantees are off,
-                    # resolve each op individually.
+                    # resolve each op individually.  Count the silent
+                    # degradation so benches can assert the fast path
+                    # re-engaged after failover/reconfiguration.
+                    self.lease_degradations += 1
                     for op in ops:
                         self.sim.process(self._finish_fallback(op))
                     return 0
@@ -2315,6 +2835,8 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                     # Pinned slots (unrecovered in-flight values) must go
                     # through the full proposer, which adopts correctly.
                     has_lease = yield from self._ensure_lease(li)
+                    if not has_lease:
+                        self.lease_degradations += 1
                     fast = has_lease and key not in self._pinned
                     result = yield from self._quorum_log_once(
                         lr, li, fast, key, state, writer,
@@ -2390,13 +2912,15 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         return self.sim.process(gen())
 
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
-        """Merged view over every replica's disk (ground truth for tests)."""
+        """Merged view over every MEMBER replica's disk (ground truth for
+        tests); retired replicas' stale volumes are never consulted."""
+        members = [self.replicas[i] for i in self.member_ids]
         keys = set()
-        for r in self.replicas:
+        for r in members:
             keys.update(r.keys())
         out = {}
         for k in keys:
-            v, _, _ = merge_reads([r.read(k) for r in self.replicas])
+            v, _, _ = merge_reads([r.read(k) for r in members])
             if v is not None:
                 out[k] = v
         return out

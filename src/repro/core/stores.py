@@ -20,12 +20,10 @@ Registered backends:
 
 Threaded backends optionally wrap in a ``BatchingStore`` group-commit
 decorator (``batching=True``); simulated backends batch via ``BatchConfig``
-as before.  ``make_store`` keeps the old divergent-kwarg call sites working
-behind a ``DeprecationWarning``.
+as before.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
@@ -49,6 +47,9 @@ class StoreConfig:
     # Replicated backends (threaded and sim).
     replication: int = 3
     max_rounds: int = 256              # threaded proposer retry bound
+    # Initial member ids (defaults to range(replication)); the live set can
+    # then change via add_replica/remove_replica/set_replication.
+    membership: Optional[Sequence[int]] = None
     # file backend.
     root: Optional[str] = None
     # Simulated services.
@@ -147,10 +148,12 @@ def _build_replicated(cfg: StoreConfig, sim=None):
                                       n_replicas=cfg.replication,
                                       seed=cfg.seed,
                                       max_rounds=cfg.max_rounds,
-                                      decisions=cfg.decisions)
+                                      decisions=cfg.decisions,
+                                      membership=cfg.membership)
     return ReplicatedStore(n_replicas=cfg.replication, seed=cfg.seed,
                            max_rounds=cfg.max_rounds,
-                           decisions=cfg.decisions)
+                           decisions=cfg.decisions,
+                           membership=cfg.membership)
 
 
 @register_store("sim")
@@ -167,43 +170,5 @@ def _build_replicated_sim(cfg: StoreConfig, sim=None):
         replica_regions=cfg.replica_regions,
         placement=cfg.placement, mode=cfg.mode,
         op_timeout_ms=cfg.op_timeout_ms, batch=cfg.batch,
-        lease_ms=cfg.lease_ms, decisions=cfg.decisions)
-
-
-# --------------------------------------------------------------------------
-# Legacy shim
-# --------------------------------------------------------------------------
-# Old divergent kwarg -> StoreConfig field; same-named kwargs pass through.
-_LEGACY_KWARGS = {"n_replicas": "replication"}
-
-
-def make_store(kind: str, sim=None, **kwargs):
-    """Deprecated: construct a store from the old divergent kwargs.
-
-    Maps legacy names (``n_replicas``, threaded ``window_s`` batching, sim
-    ``window_ms`` batching) onto ``StoreConfig`` and calls ``build_store``.
-    Use ``build_store(StoreConfig(backend=...), sim=...)`` instead.
-    """
-    warnings.warn(
-        "make_store(kind, **kwargs) is deprecated; use "
-        "build_store(StoreConfig(backend=...), sim=...) — see README "
-        "'Unified store API'", DeprecationWarning, stacklevel=2)
-    cfg_kwargs = {}
-    window_ms = kwargs.pop("window_ms", None)
-    batch = kwargs.pop("batch", None)
-    if window_ms is not None and batch is None:
-        batch = BatchConfig(window_ms=window_ms,
-                            max_batch=kwargs.get("max_batch", 64))
-    if batch is not None:
-        cfg_kwargs["batch"] = batch
-    window_s = kwargs.pop("window_s", None)
-    if window_s is not None:
-        cfg_kwargs["batching"] = True
-        cfg_kwargs["window_s"] = window_s
-    for key, value in kwargs.items():
-        cfg_kwargs[_LEGACY_KWARGS.get(key, key)] = value
-    fields = StoreConfig.__dataclass_fields__
-    unknown = sorted(k for k in cfg_kwargs if k not in fields)
-    if unknown:
-        raise TypeError(f"make_store: unknown kwargs {unknown}")
-    return build_store(StoreConfig(backend=kind, **cfg_kwargs), sim=sim)
+        lease_ms=cfg.lease_ms, decisions=cfg.decisions,
+        membership=cfg.membership)

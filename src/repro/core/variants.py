@@ -9,32 +9,13 @@ registered strategy class per family member).  This module keeps:
   (registered protocol name, replicated-storage mode).
 * ``measured_caller_latency_ms()`` — runs one commit per row on the
   discrete-event sim and must land EXACTLY on the analytic RTT multiple.
-* ``CoordinatorLogCluster`` — deprecated alias of
-  ``Cluster(..., protocol="cl")``; use the registry instead.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict
 
 from .protocol import Cluster, ProtocolConfig
 from .state import Decision, TxnSpec
-
-
-class CoordinatorLogCluster(Cluster):
-    """Deprecated: use ``Cluster`` with ``ProtocolConfig(protocol="cl")``.
-
-    Kept so pre-registry call sites keep working; it pins the protocol to
-    the registered ``cl`` strategy regardless of ``cfg.protocol`` (the old
-    class was paired with ``protocol="2pc"`` configs).
-    """
-
-    def __init__(self, sim, storage, nodes, cfg: ProtocolConfig):
-        warnings.warn(
-            "CoordinatorLogCluster is deprecated; use "
-            "Cluster(sim, storage, nodes, ProtocolConfig(protocol='cl'))",
-            DeprecationWarning, stacklevel=2)
-        super().__init__(sim, storage, nodes, cfg, protocol="cl")
 
 
 def rtt_table() -> Dict[str, Dict]:

@@ -15,9 +15,14 @@
                the window so the report can price the disruption.
   failures   – ``kill_replica_at`` fails one replica of a replicated store
                mid-run (quorum survives, serving must too);
-               ``stall_at`` parks one session step mid-vote and lets a
-               scavenger CAS-terminate it (the non-blocking §3.3 path) —
-               the engine keeps serving through both.
+               ``revive_replica_at`` brings the killed replica back through
+               recovery-driven state transfer (kill-then-rejoin);
+               ``scale_at``/``scale_to`` fire a live membership change
+               (``set_replication``) — a scale event is a fault-injection
+               hook like the others; ``stall_at`` parks one session step
+               mid-vote and lets a scavenger CAS-terminate it (the
+               non-blocking §3.3 path) — the engine keeps serving through
+               all of them.
 
 The engine never stalls on any of these: that is the claim the serve bench
 gates (publish-window throughput ≥ 80% of steady state, with a replica
@@ -62,6 +67,9 @@ class EngineConfig:
     publish_interval_s: float = 0.02
     # Failure injection.
     kill_replica_at: Optional[float] = None   # replicated backend only
+    revive_replica_at: Optional[float] = None  # rejoin the killed replica
+    scale_at: Optional[float] = None          # live membership change...
+    scale_to: Optional[int] = None            # ...to this replication R
     stall_at: Optional[float] = None          # park a step, scavenge it
     stall_ms: float = 50.0
     seed: int = 0
@@ -100,6 +108,8 @@ class ServeEngine:
         self._lock = threading.Lock()
         self._stall_pending = False
         self.replica_killed: Optional[int] = None
+        self.replica_revived: Optional[int] = None
+        self._scale_thread: Optional[threading.Thread] = None
 
     # -- progress-fraction event triggers -----------------------------------
     def _maybe_fire(self, frac: float) -> None:
@@ -111,11 +121,44 @@ class ServeEngine:
                     return
                 self._fired.add("kill")
             if hasattr(self.store, "fail_replica"):
-                # Kill the LAST replica: never index 0, which sim configs
-                # treat as the leader-colocated one.
-                idx = len(self.store.replicas) - 1
+                # Kill the highest MEMBER replica: never index 0, which sim
+                # configs treat as the leader-colocated one, and never a
+                # retired id (a non-member kill is a no-op after scale-in).
+                m = getattr(self.store, "membership", None)
+                idx = (max(m.replica_ids) if m is not None
+                       else len(self.store.replicas) - 1)
                 self.store.fail_replica(idx)
                 self.replica_killed = idx
+        if (cfg.revive_replica_at is not None
+                and frac >= cfg.revive_replica_at
+                and "revive" not in self._fired):
+            with self._lock:
+                if "revive" in self._fired:
+                    return
+                self._fired.add("revive")
+            idx = self.replica_killed
+            if idx is not None and hasattr(self.store, "revive_replica"):
+                # Rejoin through recovery-driven state transfer, not a bare
+                # liveness flip: the volume missed writes while dead.
+                self.store.revive_replica(idx)
+                self.replica_revived = idx
+            elif idx is not None and hasattr(self.store, "recover_replica"):
+                self.store.recover_replica(idx)
+                self.replica_revived = idx
+        if (cfg.scale_at is not None and cfg.scale_to is not None
+                and frac >= cfg.scale_at and "scale" not in self._fired):
+            with self._lock:
+                if "scale" in self._fired:
+                    return
+                self._fired.add("scale")
+            if hasattr(self.store, "set_replication"):
+                # Reconfiguration does bulk state transfer + an epoch bump;
+                # run it beside the serving loop, not inside a step.
+                th = threading.Thread(
+                    target=self.store.set_replication,
+                    args=(cfg.scale_to,), daemon=True)
+                th.start()
+                self._scale_thread = th
         if (cfg.publish_at is not None and frac >= cfg.publish_at
                 and "pub" not in self._fired):
             with self._lock:
@@ -276,6 +319,8 @@ class ServeEngine:
             elapsed = time.monotonic() - run_start
             self._stop_publisher()
             self.batcher.stop()
+            if self._scale_thread is not None:
+                self._scale_thread.join(timeout=30.0)
         report = self.recorder.report(
             elapsed, run_start, protocol=cfg.session.protocol,
             arrival=cfg.arrival, batch_mode=cfg.batch_mode,
@@ -297,6 +342,15 @@ class ServeEngine:
             "fallback_ops": getattr(self.store, "fallback_ops", 0),
             "replica_killed": (-1 if self.replica_killed is None
                                else self.replica_killed),
+            "replica_revived": (-1 if self.replica_revived is None
+                                else self.replica_revived),
+            "reconfigurations": getattr(self.store, "reconfigurations", 0),
+            "state_transfers": getattr(self.store, "state_transfers", 0),
+            "replication": getattr(self.store, "n", 0),
+            "lease_degradations": (self.mgr.keeper.degradations
+                                   if self.mgr.keeper is not None else 0),
+            "lease_reengagements": (self.mgr.keeper.reengagements
+                                    if self.mgr.keeper is not None else 0),
         }
         pubs = list(self.publisher.records) if self.publisher else []
         return ServeResult(report=report, publishes=pubs,

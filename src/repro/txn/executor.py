@@ -64,6 +64,12 @@ class BenchConfig:
     storage_mode: Optional[str] = None
     # (replica_idx, fail_at_ms[, recover_at_ms]) outage schedule
     replica_failures: tuple = ()
+    # (at_ms, n_replicas) live membership changes (replicated-sim only):
+    # at each ``at_ms`` the store reconfigures to ``n_replicas`` members —
+    # scale-out grows fresh joiners via recovery-driven state transfer,
+    # scale-in retires the highest member ids.  Empty (the default) arms
+    # nothing: the run is bit-identical to the pre-elasticity executor.
+    reconfigurations: tuple = ()
     # Storage backend by registry name (core.stores).  None — the default —
     # keeps the historical auto-pick: "replicated-sim" when replication > 1
     # or a topology is set, else "sim".  Naming a threaded backend here is
@@ -161,6 +167,13 @@ class BenchResult:
     fast_path_ops: int = 0
     fallback_ops: int = 0
     lease_history: List[tuple] = field(default_factory=list)
+    # Elastic membership: (started_ms, cutover_ms, installed_ms, old_n,
+    # new_n) per completed config change (started→cutover is background
+    # state transfer, cutover→installed the disruptive epoch bump), and
+    # ops that wanted the lease fast path but degraded to the full
+    # proposer (0/empty without reconfiguration).
+    reconfig_history: List[tuple] = field(default_factory=list)
+    lease_degradations: int = 0
     # Termination-storm accounting: termination runs started, runs absorbed
     # by the compute-side per-(node, txn) singleflight, log_once calls
     # answered from the storage decision cache, calls that joined an
@@ -238,6 +251,12 @@ def run_bench(workload_factory, model: LatencyModel,
     if hasattr(storage, "fail_replica"):   # single-store backends: no-op
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
+    if cfg.reconfigurations:
+        if not hasattr(storage, "schedule_reconfigure"):
+            raise ValueError(f"backend {backend!r} does not support live "
+                             f"membership changes (reconfigurations=)")
+        for at_ms, n_new in cfg.reconfigurations:
+            storage.schedule_reconfigure(at_ms, n_new)
     # Timeouts must sit above the storage service's tail latency, or healthy
     # transactions get spuriously terminated (the paper's deployments tune
     # timeouts per service; we scale with the model's write latency, and in
@@ -376,6 +395,8 @@ def run_bench(workload_factory, model: LatencyModel,
     res.fast_path_ops = getattr(storage, "fast_path_ops", 0)
     res.fallback_ops = getattr(storage, "fallback_ops", 0)
     res.lease_history = list(getattr(storage, "lease_history", ()))
+    res.reconfig_history = list(getattr(storage, "reconfig_history", ()))
+    res.lease_degradations = getattr(storage, "lease_degradations", 0)
     res.terminations = cluster.ctx.terminations
     res.dedup_hits = cluster.ctx.dedup_hits
     res.decision_cache_hits = getattr(storage, "decision_cache_hits", 0)

@@ -88,6 +88,7 @@ class WallclockResult:
     fast_path_ops: int = 0
     fallback_ops: int = 0
     lease_acquisitions: int = 0
+    lease_degradations: int = 0       # keeper slow-path answers (surfaced)
 
     @property
     def throughput_tps(self) -> float:
@@ -282,6 +283,8 @@ def run_wallclock(cfg: WallclockConfig) -> WallclockResult:
     res.fallback_ops = getattr(store, "fallback_ops", 0)
     res.lease_acquisitions = (keeper.acquisitions if keeper is not None
                               else getattr(store, "lease_acquisitions", 0))
+    res.lease_degradations = (keeper.degradations if keeper is not None
+                              else getattr(store, "lease_degradations", 0))
     return res
 
 

@@ -5,7 +5,7 @@ the CL accounting drift.
 """
 import pytest
 
-from repro.core import (AZURE_REDIS, CROSS_ZONE, Cluster, CoordinatorLogCluster,
+from repro.core import (AZURE_REDIS, CROSS_ZONE, Cluster,
                         Decision, LatencyModel, ProtocolConfig, RegionTopology,
                         ReplicatedSimStorage, Sim, SimStorage, TxnSpec, Vote,
                         get_protocol, registered_protocols)
@@ -25,13 +25,12 @@ def test_registry_contents_and_errors():
         get_protocol("3pc")
 
 
-def test_coordinator_log_cluster_is_deprecated_alias():
+def test_coordinator_log_alias_removed_registry_is_the_door():
+    import repro.core
+    assert not hasattr(repro.core, "CoordinatorLogCluster")
     sim = Sim()
-    with pytest.warns(DeprecationWarning):
-        cl = CoordinatorLogCluster(sim, SimStorage(sim, AZURE_REDIS),
-                                   ["n0", "n1"],
-                                   ProtocolConfig(protocol="2pc"))
-    # The alias pins the registered "cl" strategy despite cfg.protocol.
+    cl = Cluster(sim, SimStorage(sim, AZURE_REDIS), ["n0", "n1"],
+                 ProtocolConfig(protocol="cl"))
     assert cl.protocol.name == "cl"
 
 

@@ -1,18 +1,16 @@
-"""Unified store API: registry names, factory construction, the deprecated
-``make_store`` shim, and the per-lane adaptive-timeout policy the redesign
-threads through ``ProtocolConfig.timeout(kind, lane=...)``."""
+"""Unified store API: registry names, factory construction, membership
+plumbing, and the per-lane adaptive-timeout policy the redesign threads
+through ``ProtocolConfig.timeout(kind, lane=...)``."""
 from __future__ import annotations
-
-import warnings
 
 import pytest
 
 from repro.core import (AZURE_REDIS, AdaptiveTimeouts, BatchConfig,
                         BatchingStore, DecisionCacheConfig, EwmaStat,
-                        FileStore, LeaseKeeper, MemoryStore,
+                        FileStore, LeaseKeeper, MembershipConfig, MemoryStore,
                         QuorumUnavailable, ReplicatedSimStorage,
                         ReplicatedStore, Sim, SimStorage, StoreConfig, Vote,
-                        build_store, get_store, make_store,
+                        build_store, get_store,
                         registered_stores)
 from repro.core.stores import is_simulated
 
@@ -89,32 +87,39 @@ def test_batching_wraps_threaded_backends():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated make_store shim
+# Membership plumbing (make_store shim removed — factory is the only door)
 # ---------------------------------------------------------------------------
-def test_make_store_warns_and_maps_legacy_kwargs():
-    with pytest.warns(DeprecationWarning, match="build_store"):
-        store = make_store("replicated", n_replicas=5, seed=2)
-    assert isinstance(store, ReplicatedStore) and store.n == 5
+def test_make_store_shim_is_gone():
+    import repro.core
+    import repro.core.stores
+    assert not hasattr(repro.core, "make_store")
+    assert not hasattr(repro.core.stores, "make_store")
 
 
-def test_make_store_sim_window_ms():
+def test_membership_config_normalizes_and_quorums():
+    m = MembershipConfig(1, (2, 0, 1, 1))
+    assert m.replica_ids == (0, 1, 2)
+    assert m.n == 3 and m.quorum == 2
+    assert m.quorum_of([0, 1]) and not m.quorum_of([2])
+    # quorum_of counts only THIS config's members.
+    assert not m.quorum_of([7, 8, 9])
+
+
+def test_build_replicated_with_membership():
+    store = build_store(StoreConfig(backend="replicated",
+                                    membership=(0, 2, 4)))
+    assert store.n == 3 and store.quorum == 2
+    assert len(store.replicas) == 5       # table sized for the id space
+    assert store.membership.replica_ids == (0, 2, 4)
+
+
+def test_build_replicated_sim_with_membership():
     sim = Sim()
-    with pytest.warns(DeprecationWarning):
-        store = make_store("sim", sim=sim, window_ms=2.0)
-    assert isinstance(store, SimStorage)
-    assert store.batch.window_ms == 2.0
-
-
-def test_make_store_threaded_window_s():
-    with pytest.warns(DeprecationWarning):
-        store = make_store("memory", window_s=0.001)
-    assert isinstance(store, BatchingStore)
-
-
-def test_make_store_rejects_unknown_kwargs():
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(TypeError, match="bogus"):
-            make_store("memory", bogus=1)
+    store = build_store(
+        StoreConfig(backend="replicated-sim", model=AZURE_REDIS,
+                    replication=5, membership=(0, 1, 2)), sim=sim)
+    assert store.n == 3 and store.quorum == 2
+    assert store.member_ids == [0, 1, 2]
 
 
 # ---------------------------------------------------------------------------
@@ -250,5 +255,26 @@ def test_lease_keeper_degrades_on_quorum_loss():
     keeper = LeaseKeeper(store, holder="h0")
     assert keeper.ensure() is None       # no quorum: degrade, don't raise
     assert keeper.failures == 1
+    # The degradation is SURFACED, not silent: counted and flagged.
+    assert keeper.degradations == 1 and keeper.degraded
     store.recover_replica(0)
     assert keeper.ensure() is not None   # quorum back: fast path returns
+    assert keeper.reengagements == 1 and not keeper.degraded
+
+
+def test_lease_keeper_logs_degradation_transitions(caplog):
+    import logging
+    store = ReplicatedStore(n_replicas=3, seed=1)
+    store.fail_replica(0)
+    store.fail_replica(1)
+    keeper = LeaseKeeper(store, holder="h0")
+    with caplog.at_level(logging.INFO, logger="repro.core.control"):
+        keeper.ensure()                  # -> slow: one WARNING
+        keeper.ensure()                  # still slow: NO second line
+        store.recover_replica(0)
+        keeper.ensure()                  # -> fast: one INFO
+    slow = [r for r in caplog.records if "slow path" in r.message]
+    fast = [r for r in caplog.records if "re-engaged" in r.message]
+    assert len(slow) == 1 and slow[0].levelno == logging.WARNING
+    assert len(fast) == 1 and fast[0].levelno == logging.INFO
+    assert keeper.degradations == 2      # every slow answer counts
