@@ -1,0 +1,243 @@
+"""Chaos sweep: fault injection × protocol × replication, machine-checked.
+
+Runs the closed-loop YCSB executor under seeded ``FaultSchedule`` chaos
+(message drop/duplication/delay/reorder, network partitions with timed
+heals, clock skew, torn partial-scatter writes, crash–restart with durable
+logs) and validates EVERY run with the history checker
+(``repro.core.history``): AC1–AC3, writer-of consistency and
+recoverability must hold with zero violations — the gate is a safety
+certificate, not just a throughput pin.
+
+Grid: fault mix × R ∈ {1, 3} × {cornus, 2pc}.  Per cell the gate asserts
+
+  * zero checker violations (any violation writes a failure-repro bundle
+    to ``$CHAOS_REPRO_DIR`` and fails the run),
+  * bounded gaveups (chaos may abort txns, not strand them),
+  * cornus goodput ≥ 2pc goodput under the identical fault schedule
+    (the paper's claim survives adversity, not just fair weather),
+
+plus the usual pinned-throughput regression check (BENCH_chaos.json).
+
+Standalone entry points::
+
+    python -m benchmarks.chaos --quick --check-baseline
+    python -m benchmarks.chaos --quick --write-baseline
+    python -m benchmarks.chaos --verify-schedules 200
+    python -m benchmarks.chaos --replay chaos-failures/chaos-seed7-cornus.json
+
+``--verify-schedules N`` runs N distinct seeded schedules round-robin over
+EVERY registered protocol at R ∈ {1, 3} and fails on any violation;
+``--replay`` re-runs a failure bundle bit-for-bit.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import AZURE_REDIS, FaultSchedule
+from repro.core.chaos import load_repro_bundle, write_repro_bundle
+from repro.core.protocols import registered_protocols
+from repro.txn import BenchConfig, YCSBWorkload, run_bench
+
+from benchmarks._baseline import Row, check_baseline, write_baseline
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_chaos.json")
+MIXES = ("messages", "partition", "crash", "full")
+PROTOS = ("cornus", "2pc")
+GAVEUP_FRAC_BOUND = 0.05        # gaveups / issued txns per cell
+# The keys a repro bundle's config carries — exactly what replay needs to
+# reconstruct the BenchConfig (the schedule itself rides separately).
+CONFIG_KEYS = ("protocol", "n_nodes", "threads_per_node", "horizon_ms",
+               "seed", "replication", "retry_fresh_ids")
+
+
+def _wl(nodes, seed):
+    return YCSBWorkload(nodes, seed=seed)
+
+
+def run_one(proto: str, mix: str, replication: int, seed: int,
+            horizon_ms: float):
+    """One chaotic cell: generate the schedule, run, return (res, bundle
+    ingredients)."""
+    nodes = [f"n{i}" for i in range(4)]
+    sched = FaultSchedule.generate(seed, nodes, horizon_ms,
+                                   replication if replication > 1 else 0,
+                                   mix)
+    cfg = BenchConfig(protocol=proto, n_nodes=4, threads_per_node=2,
+                      horizon_ms=horizon_ms, seed=seed,
+                      replication=replication, retry_fresh_ids=True,
+                      chaos=sched, record_history=True)
+    res = run_bench(_wl, AZURE_REDIS, cfg)
+    config = {k: getattr(cfg, k) for k in CONFIG_KEYS}
+    return res, sched, config
+
+
+def _report_failure(res, sched, config, cell: str) -> str:
+    path = write_repro_bundle(sched, config, res.violation_details,
+                              name=f"{cell.replace('/', '-')}.json")
+    print(f"# VIOLATIONS in {cell}: {res.violations} "
+          f"(repro bundle: {path})", file=sys.stderr)
+    for v in res.violation_details:
+        print(f"#   {v}", file=sys.stderr)
+    return path
+
+
+def sweep(quick: bool = False) -> List[Row]:
+    horizon = 300.0 if quick else 600.0
+    rows: List[Row] = []
+    for mix in MIXES:
+        for replication in (1, 3):
+            tput: Dict[str, float] = {}
+            for proto in PROTOS:
+                res, sched, config = run_one(proto, mix, replication,
+                                             seed=7, horizon_ms=horizon)
+                tput[proto] = res.throughput_tps
+                cell = f"chaos/{mix}/r{replication}/{proto}"
+                issued = max(1, res.commits + res.aborts + res.gaveups)
+                derived = (f"commits={res.commits} gaveups={res.gaveups} "
+                           f"dropped={res.msgs_dropped} "
+                           f"dup={res.msgs_duplicated} "
+                           f"delayed={res.msgs_delayed} "
+                           f"reordered={res.msgs_reordered} "
+                           f"torn={res.torn_writes} "
+                           f"restarts={res.crash_restarts} "
+                           f"recov={res.recoveries_run} "
+                           f"guard_retries={res.guard_retries} "
+                           f"trips={res.breaker_trips}")
+                rows.append((f"{cell}/tput_tps", res.throughput_tps,
+                             derived))
+                rows.append((f"{cell}/violations", float(res.violations),
+                             "AC1-AC3 + writer-of + recoverability"))
+                rows.append((f"{cell}/gaveup_frac",
+                             res.gaveups / issued,
+                             f"bound {GAVEUP_FRAC_BOUND}"))
+                if res.violations:
+                    _report_failure(res, sched, config, cell)
+            rows.append((f"chaos/{mix}/r{replication}/goodput_ratio",
+                         tput["cornus"] / max(tput["2pc"], 1e-9),
+                         "cornus/2pc committed tput under identical chaos; "
+                         "bound >= 1.0"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Safety gate (beyond the throughput pin)
+# ---------------------------------------------------------------------------
+def _check_safety(rows: List[Row]) -> bool:
+    ok = True
+    for name, value, _ in rows:
+        if name.endswith("/violations") and value != 0:
+            print(f"# safety REGRESSION: {name} = {value:.0f} "
+                  f"(must be 0)", file=sys.stderr)
+            ok = False
+        if name.endswith("/gaveup_frac") and value > GAVEUP_FRAC_BOUND:
+            print(f"# liveness REGRESSION: {name} = {value:.3f} "
+                  f"(bound {GAVEUP_FRAC_BOUND})", file=sys.stderr)
+            ok = False
+        if name.endswith("/goodput_ratio") and value < 1.0:
+            print(f"# goodput REGRESSION: {name} = {value:.3f} "
+                  f"(cornus must not trail 2pc under identical chaos)",
+                  file=sys.stderr)
+            ok = False
+    if ok:
+        print("# safety ok: zero violations, bounded gaveups, "
+              "cornus >= 2pc goodput in every cell", file=sys.stderr)
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# --verify-schedules N: the acceptance sweep (every protocol, R ∈ {1, 3})
+# ---------------------------------------------------------------------------
+def verify_schedules(n: int, horizon_ms: float = 300.0) -> int:
+    cells = [(p, r) for p in registered_protocols() for r in (1, 3)]
+    bad = 0
+    recoveries: Dict[str, int] = {}
+    t0 = time.time()
+    for i in range(n):
+        proto, replication = cells[i % len(cells)]
+        mix = MIXES[(i // len(cells)) % len(MIXES)]
+        res, sched, config = run_one(proto, mix, replication, seed=i,
+                                     horizon_ms=horizon_ms)
+        recoveries[proto] = recoveries.get(proto, 0) + res.recoveries_run
+        if res.violations:
+            bad += 1
+            _report_failure(res, sched, config,
+                            f"verify/{mix}/r{replication}/{proto}/seed{i}")
+    for proto in sorted(recoveries):
+        print(f"# {proto}: crash-restart recoveries exercised: "
+              f"{recoveries[proto]}", file=sys.stderr)
+    print(f"# verified {n} schedules in {time.time() - t0:.1f}s: "
+          f"{bad} with violations", file=sys.stderr)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# --replay <bundle>: re-run a recorded failure bit-for-bit
+# ---------------------------------------------------------------------------
+def replay(path: str) -> int:
+    sched, config = load_repro_bundle(path)
+    kwargs = {k: config[k] for k in CONFIG_KEYS if k in config}
+    cfg = BenchConfig(chaos=sched, record_history=True, **kwargs)
+    res = run_bench(_wl, AZURE_REDIS, cfg)
+    print(f"# replayed {path}: protocol={cfg.protocol} seed={cfg.seed} "
+          f"commits={res.commits} gaveups={res.gaveups} "
+          f"recoveries={res.recoveries_run}", file=sys.stderr)
+    if res.violations:
+        print(f"# violations REPRODUCED ({res.violations}):",
+              file=sys.stderr)
+        for v in res.violation_details:
+            print(f"#   {v}", file=sys.stderr)
+    else:
+        print("# no violations (failure no longer reproduces)",
+              file=sys.stderr)
+    return res.violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced issue windows (CI)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="pin current quick-mode throughput "
+                         "to BENCH_chaos.json")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail (exit 1) on >15%% throughput regression, "
+                         "any checker violation, unbounded gaveups, or "
+                         "cornus goodput below 2pc")
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--replay", metavar="BUNDLE",
+                    help="re-run a failure-repro bundle and re-check")
+    ap.add_argument("--verify-schedules", type=int, metavar="N",
+                    help="run N seeded schedules across every registered "
+                         "protocol at R in {1,3}; exit 1 on any violation")
+    args = ap.parse_args()
+
+    if args.replay:
+        sys.exit(1 if replay(args.replay) else 0)
+    if args.verify_schedules:
+        sys.exit(1 if verify_schedules(args.verify_schedules) else 0)
+
+    t0 = time.time()
+    rows = sweep(args.quick or args.write_baseline or args.check_baseline)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.4f},{derived}")
+    print(f"# sweep took {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.write_baseline:
+        write_baseline(rows, args.baseline, "benchmarks.chaos --quick")
+        print(f"# baseline written to {args.baseline}", file=sys.stderr)
+    if args.check_baseline:
+        if not check_baseline(rows, args.baseline, _check_safety):
+            print("::error::chaos sweep regressed against BENCH_chaos.json "
+                  "or violated a safety invariant", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

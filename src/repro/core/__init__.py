@@ -9,6 +9,10 @@ Public surface:
   protocol   – Cluster facade wiring the three together (back-compat)
   variants   – Table-3 RTT model + runnable deployments per row
   sim        – deterministic discrete-event kernel
+  chaos      – seeded FaultSchedule + Nemesis fault injection, retry
+               policy / circuit breaker, failure-repro bundles
+  history    – operation histories + AC1–AC3 / writer-of /
+               recoverability checker (machine-verified safety)
 """
 from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
@@ -24,6 +28,12 @@ from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       StoreLease, merge_reads)
 from .stores import (StoreConfig, build_store, get_store,
                      register_store, registered_stores)
+from .chaos import (ChaosStore, CircuitBreaker, ClockSkew, CrashRestart,
+                    FaultSchedule, GuardedStorage, LinkChaos, Nemesis,
+                    NetPartition, RetryPolicy, TornWrite, load_repro_bundle,
+                    write_repro_bundle)
+from .history import (HistoryOp, HistoryRecorder, Violation, check_history,
+                      check_run, collect_decisions)
 from .protocols import (CommitProtocol, Transport, TxnContext, get_protocol,
                         register, registered_protocols)
 from .protocol import Cluster, ProtocolConfig
@@ -48,4 +58,10 @@ __all__ = [
     "LeaseKeeper", "ThreadControlPlane",
     "StoreConfig", "build_store", "get_store",
     "register_store", "registered_stores",
+    "FaultSchedule", "Nemesis", "LinkChaos", "NetPartition", "ClockSkew",
+    "TornWrite", "CrashRestart", "RetryPolicy", "CircuitBreaker",
+    "GuardedStorage", "ChaosStore", "write_repro_bundle",
+    "load_repro_bundle",
+    "HistoryOp", "HistoryRecorder", "Violation", "check_history",
+    "check_run", "collect_decisions",
 ]

@@ -24,7 +24,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Tuple
 
 from .sim import Sim
-from .state import TxnSpec
+from .state import Decision, TxnSpec
 from .protocols import (CommitProtocol, ProtocolConfig, Transport, TxnContext,
                         get_protocol)
 
@@ -51,6 +51,10 @@ class Cluster:
         cls = get_protocol(protocol or cfg.protocol)
         self.protocol: CommitProtocol = cls(self.transport, storage,
                                             self.ctx, cfg)
+        # Crash–restart accounting (chaos plane): restarts performed, and
+        # recover() runs the restarts triggered for in-doubt txns.
+        self.crash_restarts = 0
+        self.recoveries_run = 0
 
     # -- liveness (delegated to the transport) ------------------------------
     @property
@@ -109,6 +113,7 @@ class Cluster:
 
         Returns the coordinator's done-Event (value: TxnOutcome).
         """
+        self.ctx.specs[spec.txn_id] = spec
         for p in spec.participants:
             if p != spec.coordinator:
                 self.sim.process(self.protocol.participant_round(spec, p))
@@ -118,3 +123,34 @@ class Cluster:
         """Recovered node resolving one in-flight transaction (Table 1/2
         "During Recovery"); outcome recorded under (txn, me + ":recovery")."""
         return self.sim.process(self.protocol.recover(spec, me))
+
+    # -- crash–restart (chaos plane) ----------------------------------------
+    def schedule_crash_restart(self, node: str, at: float,
+                               restart_at: float) -> None:
+        """Crash ``node`` at ``at`` and bring it BACK at ``restart_at`` with
+        its durable log intact: in-flight protocol rounds die via the
+        existing ``alive()`` checks, and on restart the node scans every
+        txn it participated in and runs the registered protocol's
+        ``recover()`` (Table 1/2 in-doubt resolution) for each one still
+        unresolved — against whatever live traffic is running."""
+        self.fail(node, at, restart_at)
+        self.sim._schedule(restart_at, lambda: self._restart(node))
+
+    def _restart(self, node: str) -> None:
+        self.crash_restarts += 1
+        # New incarnation: protocol rounds started before the crash detect
+        # the bump (CommitProtocol.live) and stop acting — the real process
+        # they modelled died with the crash.
+        tr = self.transport
+        tr.incarnations[node] = tr.incarnation(node) + 1
+        for txn_id, spec in list(self.ctx.specs.items()):
+            if node not in spec.participants and node != spec.coordinator:
+                continue
+            st = self.ctx.local.get((node, txn_id))
+            if st is not None and st.get("decision") is not None:
+                continue                       # decided before the crash
+            prev = self.ctx.outcomes.get((txn_id, node + ":recovery"))
+            if prev is not None and prev.decision != Decision.UNDETERMINED:
+                continue                       # already resolved by recovery
+            self.recoveries_run += 1
+            self.sim.process(self.protocol.recover(spec, node))

@@ -96,6 +96,20 @@ class CommitProtocol:
     def alive(self, node: str) -> bool:
         return self.transport.alive(node)
 
+    def epoch(self, node: str) -> int:
+        """Current crash–restart incarnation of ``node``."""
+        return self.transport.incarnation(node)
+
+    def live(self, node: str, epoch: int) -> bool:
+        """Alive AND still the same incarnation.  A round that started
+        before a crash must not keep acting after the node restarts: the
+        real process (and its volatile state) died with the crash, and only
+        ``recover()`` speaks for the restarted one.  Rounds capture their
+        epoch at entry and guard resumption points with this instead of
+        plain ``alive``."""
+        return (self.transport.alive(node)
+                and self.transport.incarnation(node) == epoch)
+
     def send(self, src, dst, txn, kind, value=None):
         self.transport.send(src, dst, txn, kind, value)
 
@@ -125,6 +139,7 @@ class CommitProtocol:
             return out
 
         # ---- phase 1: vote requests ---------------------------------------
+        ep = self.epoch(me)
         if not self.alive(me):
             return out
         for p in spec.participants:                      # [Alg1 L2-3]
@@ -143,7 +158,7 @@ class CommitProtocol:
                            cfg.timeout_ref("vote", lane=p))
                  for p in spec.participants]
         results = yield self.sim.all_of(waits)
-        if not self.alive(me):
+        if not self.live(me, ep):
             return out
         prepare_done = sim.now
         out.prepare_ms = prepare_done - t0
@@ -157,12 +172,12 @@ class CommitProtocol:
             decision = Decision.COMMIT
         else:                                             # [Alg1 L7]
             decision = yield from self.on_vote_timeout(spec, me, out)
-        if decision is None or not self.alive(me):
+        if decision is None or not self.live(me, ep):
             return out
 
         # ---- decision point (strategy: who logs it, and when) -------------
         yield from self.log_decision(spec, me, decision)
-        if not self.alive(me):
+        if not self.live(me, ep):
             return out
 
         out.decision = decision                           # [Alg1 L8]
@@ -183,6 +198,7 @@ class CommitProtocol:
         is sent to the coordinator's vote slot with zero delay so the
         collection loop treats local and remote votes uniformly."""
         me, txn = spec.coordinator, spec.txn_id
+        ep = self.epoch(me)
         st = self.ctx.local_state(me, txn)
         if me in spec.read_only and spec.read_only_known_upfront:
             st["status"] = "voted"
@@ -195,6 +211,8 @@ class CommitProtocol:
             self.send(me, me, txn, f"vote:{me}", "ABORT")
             return
         vote = yield from self.log_vote(spec, me)
+        if not self.live(me, ep):
+            return
         if vote == "ABORT":
             # A peer already aborted on our behalf via termination.
             self.ctx.decide(me, txn, Decision.ABORT)
@@ -215,6 +233,7 @@ class CommitProtocol:
         if me == spec.coordinator:
             return  # voted via _local_vote
         t0 = sim.now
+        ep = self.epoch(me)
         out = TxnOutcome(txn_id=txn, node=me, decision=Decision.UNDETERMINED)
         st = self.ctx.local_state(me, txn)
 
@@ -231,7 +250,7 @@ class CommitProtocol:
         tag, msg = yield self.wait(                        # [Alg1 L12]
             me, txn, "vote-req",
             cfg.timeout_ref("votereq", lane=spec.coordinator))
-        if not self.alive(me):
+        if not self.live(me, ep):
             return out
         if tag == "timeout":                               # [Alg1 L13]
             if self.participant_logs:
@@ -267,6 +286,8 @@ class CommitProtocol:
             tag, decision = yield self.wait(
                 me, txn, "decision",
                 cfg.timeout_ref("decision", lane=spec.coordinator))
+            if not self.live(me, ep):
+                return out
             d = decision if tag == "msg" else Decision.ABORT
             return self._finish(spec, me, out, d)
 
@@ -274,7 +295,7 @@ class CommitProtocol:
         # family — possibly with storage-side forwarding — plain forced
         # log for 2PC, nothing for CL).                    [Alg1 L15]
         vote = yield from self.log_vote(spec, me)
-        if not self.alive(me):
+        if not self.live(me, ep):
             return out
         if vote == "ABORT":                                # [Alg1 L16-17]
             # A peer already aborted on our behalf via termination.
@@ -295,13 +316,15 @@ class CommitProtocol:
         tag, decision = yield self.wait(
             me, txn, "decision",
             cfg.timeout_ref("decision", lane=spec.coordinator))
-        if not self.alive(me):
+        if not self.live(me, ep):
             return out
         if tag == "timeout":
             out.ran_termination = True
             tstart = sim.now
             decision = yield from self.run_termination(spec, me, out)
             out.termination_ms = sim.now - tstart
+            if not self.live(me, ep):
+                return out
         if decision is None:
             # Blocked until the sim horizon (2PC family), or died.
             out.decision = Decision.UNDETERMINED

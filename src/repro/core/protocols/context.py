@@ -25,6 +25,11 @@ class TxnContext:
         self.terminations = 0
         self.dedup_hits = 0
         self.term_inflight: Dict[Tuple[str, str], object] = {}
+        # Every spec the cluster ever ran, by txn id — what a restarting
+        # node scans to find its in-doubt transactions (Table 1/2 recovery
+        # needs the participant list, which in a real system would be read
+        # from the coordinator's durable log).
+        self.specs: Dict[str, "object"] = {}
         # Hooks for the transaction executor (lock release timing, ELR).
         self.on_precommit: Optional[Callable[[str, str, float], None]] = None
         self.on_finish: Optional[

@@ -48,18 +48,31 @@ class CornusProtocol(CommitProtocol):
         cfg = self.cfg
         txn = spec.txn_id
         out.ran_termination = True
+        # §3.6: known-upfront read-only participants never log a vote, so
+        # their empty slots carry NO information about the transaction —
+        # CAS-forcing ABORT into one can "win" a slot whose owner already
+        # replied VOTE-YES by message, aborting a transaction the
+        # coordinator has committed.  They are excluded from termination
+        # exactly as the paper excludes them from the decision phase.
+        live = [p for p in spec.participants
+                if not (p in spec.read_only and spec.read_only_known_upfront)]
+        ep = self.epoch(me)
         while True:
-            if not self.alive(me):
+            if not self.live(me, ep):
                 return None
-            targets = [p for p in spec.participants if p != me]
+            targets = [p for p in live if p != me]
             # CAS ABORT into every other participant's log. [Alg1 L27-28]
             reqs = [self.storage.log_once(p, txn, Vote.ABORT, writer=me)
                     for p in targets]
             # Include own log state (me may have VOTE-YES there, or — if me
             # is a non-participant coordinator — nothing).
-            if me in spec.participants:
+            if me in live:
                 reqs.append(self.storage.log_once(me, txn, Vote.ABORT,
                                                   writer=me))
+            if not reqs:
+                # Every voting participant is read-only: nothing was ever
+                # at stake and the global decision is trivially COMMIT.
+                return Decision.COMMIT
             # No single lane gates this retry (the CAS fan-out spans every
             # participant's partition), so it reads the service-global EWMA.
             to = self.sim.timeout(cfg.timeout("termination_retry"))

@@ -105,11 +105,25 @@ class Transport:
         self._slots: Dict[Tuple[str, str, str], Event] = {}
         self.deliveries = 0        # storage→compute slot deliveries (payloads)
         self.delivery_batches = 0  # message events carrying them
+        # Chaos plane (core/chaos.Nemesis); None = no injection, and every
+        # hook below is behind that check, so unattached runs are
+        # bit-identical. ``duplicate_deliveries`` counts storage→compute
+        # payloads suppressed by the idempotent delivery guard.
+        self.chaos = None
+        self.duplicate_deliveries = 0
+        # Crash–restart incarnations: bumped by the cluster when a node
+        # comes back from a crash.  A protocol round started under an older
+        # incarnation is a ZOMBIE — its volatile state died with the crash
+        # and only ``recover()`` speaks for the new process.
+        self.incarnations: Dict[str, int] = {}
 
     # -- liveness -----------------------------------------------------------
     def alive(self, node: str) -> bool:
         t = self.sim.now
         return t < self.fail_at[node] or t >= self.recover_at[node]
+
+    def incarnation(self, node: str) -> int:
+        return self.incarnations.get(node, 0)
 
     def fail(self, node: str, at: float, recover_at: float = float("inf")):
         self.fail_at[node] = at
@@ -130,12 +144,30 @@ class Transport:
             return
         delay = 0.0 if src == dst else self.cfg.link_rtt_ms(src, dst) / 2.0
         slot = self.slot(dst, txn, kind)
+        copies = [0.0]
+        if self.chaos is not None and src != dst:
+            # Self-messages never traverse a link; everything else can be
+            # dropped / delayed / duplicated / reordered.  One deliver per
+            # surviving copy — a duplicate hitting an already-triggered slot
+            # is a no-op (Event.trigger is idempotent).
+            copies = self.chaos.message_plan(src, dst)
+            if copies is None:
+                return
 
         def deliver():
-            if self.alive(dst):
-                slot.trigger(value)
+            if not self.alive(dst):
+                return
+            if slot.triggered:
+                # Idempotent: a chaos-duplicated copy of an already-landed
+                # message is suppressed (and counted).  Trigger was always
+                # idempotent; the counter makes the guard observable.
+                if self.chaos is not None:
+                    self.duplicate_deliveries += 1
+                return
+            slot.trigger(value)
 
-        self.sim._schedule(self.sim.now + delay, deliver)
+        for extra in copies:
+            self.sim._schedule(self.sim.now + delay + extra, deliver)
 
     def deliver(self, dst: str, txn: str, kind: str, value=None):
         """Immediate delivery into a slot (no extra network delay).
@@ -145,10 +177,20 @@ class Transport:
         lands NOW — unless ``dst`` is down, in which case it is dropped like
         any other message to a dead node.
         """
-        if self.alive(dst):
-            self.deliveries += 1
-            self.delivery_batches += 1
-            self.slot(dst, txn, kind).trigger(value)
+        if not self.alive(dst):
+            return
+        if self.chaos is not None:
+            copies = self.chaos.message_plan("storage", dst)
+            if copies is None:
+                return
+            if copies != [0.0]:
+                for extra in copies:
+                    self.sim._schedule(
+                        self.sim.now + extra,
+                        lambda: self._deliver_guarded(dst, txn, kind, value,
+                                                      batch=True))
+                return
+        self._deliver_guarded(dst, txn, kind, value, batch=True)
 
     def deliver_many(self, dst: str,
                      items: List[Tuple[str, str, object]]) -> None:
@@ -158,10 +200,44 @@ class Transport:
         votes to the same compute node.  Counts as ONE delivery batch."""
         if not items or not self.alive(dst):
             return
-        self.delivery_batches += 1
+        if self.chaos is not None:
+            copies = self.chaos.message_plan("storage", dst)
+            if copies is None:
+                return
+            if copies != [0.0]:
+                for extra in copies:
+                    self.sim._schedule(
+                        self.sim.now + extra,
+                        lambda: self._deliver_batch(dst, list(items)))
+                return
+        self._deliver_batch(dst, items)
+
+    def _deliver_guarded(self, dst: str, txn: str, kind: str, value,
+                         batch: bool) -> bool:
+        """Idempotent delivery guard: a duplicated storage→compute payload
+        for an already-triggered ``(dst, txn, kind)`` slot is suppressed —
+        counted, never re-fired — so chaos-duplicated forwards cannot
+        corrupt waiter state or inflate the delivery counters."""
+        if not self.alive(dst):
+            return False
+        slot = self.slot(dst, txn, kind)
+        if slot.triggered:
+            self.duplicate_deliveries += 1
+            return False
+        self.deliveries += 1
+        if batch:
+            self.delivery_batches += 1
+        slot.trigger(value)
+        return True
+
+    def _deliver_batch(self, dst: str,
+                       items: List[Tuple[str, str, object]]) -> None:
+        fresh = 0
         for txn, kind, value in items:
-            self.deliveries += 1
-            self.slot(dst, txn, kind).trigger(value)
+            if self._deliver_guarded(dst, txn, kind, value, batch=False):
+                fresh += 1
+        if fresh:
+            self.delivery_batches += 1
 
     def wait(self, dst: str, txn: str, kind: str, timeout_ms) -> Event:
         """Event yielding ('msg', value) or ('timeout', None).

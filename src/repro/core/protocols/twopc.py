@@ -43,12 +43,21 @@ class TwoPCProtocol(CommitProtocol):
         cfg, sim = self.cfg, self.sim
         txn = spec.txn_id
         attempt = 0
+        ep = self.epoch(me)
         while True:
-            if not self.alive(me):
+            if not self.live(me, ep):
                 return None
             attempt += 1
+            # §3.6: a known-upfront read-only participant concludes COMMIT
+            # trivially the moment its reads finish — WITHOUT having seen
+            # the decision — so its answer is no evidence of the global
+            # outcome and must not be consulted.  (The coordinator's own
+            # answer is always authoritative, read-only or not.)
             peers = [p for p in list(spec.participants) + [spec.coordinator]
-                     if p != me]
+                     if p != me
+                     and not (p != spec.coordinator
+                              and p in spec.read_only
+                              and spec.read_only_known_upfront)]
             for p in peers:
                 self.send(me, p, txn, f"dec-req:{me}:{attempt}", me)
                 self._serve_decision_request(p, txn, me, attempt)

@@ -363,6 +363,12 @@ class _DecisionCacheMixin:
         self.decisions = decisions or DecisionCacheConfig()
         self._dindex = (DecisionIndex(self.decisions)
                         if self.decisions.active else None)
+        # Chaos plane + history recorder (core/chaos.Nemesis,
+        # core/history.HistoryRecorder).  Both default OFF; every hook
+        # checks for None before touching them and the recorder is
+        # subscription-only, so unattached runs are bit-identical.
+        self.chaos = None
+        self.history = None
         # Dedicated rng for cache-hit reads: the MAIN service stream stays
         # identical whether or not hits occur, so enabling the cache can
         # never perturb the timing of uncached operations.
@@ -449,6 +455,15 @@ class _DecisionCacheMixin:
         t0 = self.sim.now
         ev.subscribe(lambda _e: self._note_write_latency(self.sim.now - t0,
                                                          lane))
+        return ev
+
+    def _recorded(self, ev, kind: str, partition: str, txn: str,
+                  state=None, writer: str = ""):
+        """Feed the op into the attached history recorder (checker
+        evidence).  Subscription only — no events, no rng — and a no-op
+        without a recorder."""
+        if self.history is not None:
+            self.history.record(ev, kind, partition, txn, state, writer)
         return ev
 
 
@@ -719,7 +734,7 @@ class SimStorage(_DecisionCacheMixin):
         self._init_decisions(decisions, seed)
 
     # Each returns a sim Event yielding the op's result.
-    def _op(self, service_ms: float, apply_fn):
+    def _op(self, service_ms: float, apply_fn, lane: Optional[str] = None):
         self.requests += 1
         self.round_trips += 1
         done = self.sim.event()
@@ -728,6 +743,19 @@ class SimStorage(_DecisionCacheMixin):
         def apply():
             result["value"] = apply_fn()
 
+        if self.chaos is not None:
+            # Chaos on the compute↔storage op path: a lost REQUEST never
+            # applies; a lost RESPONSE applies but never answers — the
+            # caller's event stays untriggered either way (only a timeout
+            # + idempotent re-issue recovers it, which is what the
+            # GuardedStorage wrapper provides).
+            fate, extra = self.chaos.storage_op_fate(lane)
+            if fate == "lose-request":
+                return done
+            if fate == "lose-response":
+                self.sim._schedule(self.sim.now + service_ms / 2.0, apply)
+                return done
+            service_ms += extra
         self.sim._schedule(self.sim.now + service_ms / 2.0, apply)
         self.sim._schedule(self.sim.now + service_ms,
                            lambda: done.trigger(result.get("value")))
@@ -809,7 +837,9 @@ class SimStorage(_DecisionCacheMixin):
                 # LogOnce "returns the existing value": the txn's log set
                 # already holds a terminal record, so this attempt can only
                 # read the decision — answer it without a CAS round.
-                return self._cached_answer(hit, on_forward)
+                return self._recorded(self._cached_answer(hit, on_forward),
+                                      "log_once", partition, txn, state,
+                                      writer)
             shared = self._dindex.join(sfkey)
             if shared is not None:
                 # Identical round already in flight (a racing terminator):
@@ -819,7 +849,8 @@ class SimStorage(_DecisionCacheMixin):
                 self.requests += 1
                 if on_forward is not None:
                     shared.subscribe(lambda e: on_forward(e.value))
-                return shared
+                return self._recorded(shared, "log_once", partition, txn,
+                                      state, writer)
         if self._ingress is not None:
             ev = self._ingress.submit(
                 _BatchOp("log_once", partition, txn, state, writer,
@@ -828,7 +859,8 @@ class SimStorage(_DecisionCacheMixin):
             ms = self.model.sample(self.rng, self.model.conditional_write_ms)
             ev = self._op(ms, self._applied(
                 partition, txn,
-                lambda: self.store.log_once(partition, txn, state, writer)))
+                lambda: self.store.log_once(partition, txn, state, writer)),
+                lane=partition)
             if on_forward is not None:
                 # Vote forwarding (Table 3 cornus-opt1 / paxos-commit): the
                 # service pushes the slot's decided value to ``forward_to``
@@ -839,18 +871,20 @@ class SimStorage(_DecisionCacheMixin):
                 ev.subscribe(lambda e: on_forward(e.value))
         if self._dindex is not None:
             self._dindex.lead(sfkey, ev)
-        return self._observed(ev, lane=partition)
+        return self._recorded(self._observed(ev, lane=partition),
+                              "log_once", partition, txn, state, writer)
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
         if self._ingress is not None:
-            return self._observed(self._ingress.submit(
+            return self._recorded(self._observed(self._ingress.submit(
                 _BatchOp("log", partition, txn, state, writer)),
-                lane=partition)
+                lane=partition), "log", partition, txn, state, writer)
         ms = self.model.sample(self.rng, self.model.plain_write_ms)
-        return self._observed(self._op(ms, self._applied(
+        return self._recorded(self._observed(self._op(ms, self._applied(
             partition, txn,
-            lambda: self.store.log(partition, txn, state, writer))),
-            lane=partition)
+            lambda: self.store.log(partition, txn, state, writer)),
+            lane=partition),
+            lane=partition), "log", partition, txn, state, writer)
 
     def read_state(self, partition: str, txn: str, writer: str = ""):
         # `writer` (the calling node) is unused here but part of the storage
@@ -858,8 +892,9 @@ class SimStorage(_DecisionCacheMixin):
         # Reads bypass the group-commit lanes (they don't hit the serial
         # log device).
         ms = self.model.sample(self.rng, self.model.read_ms)
-        return self._op(ms, self._applied(
-            partition, txn, lambda: self.store.read_state(partition, txn)))
+        return self._recorded(self._op(ms, self._applied(
+            partition, txn, lambda: self.store.read_state(partition, txn)),
+            lane=partition), "read", partition, txn, None, writer)
 
     def log_batch(self, partition: str, txn: str, state: Vote, n_records: int,
                   writer: str = ""):
@@ -874,8 +909,19 @@ class SimStorage(_DecisionCacheMixin):
         op = _BatchOp("log", partition, txn, state, writer,
                       n_records=n_records)
         if self._ingress is not None:
-            return self._observed(self._ingress.submit(op), lane=partition)
-        return self._observed(self._flush_single(op), lane=partition)
+            return self._recorded(
+                self._observed(self._ingress.submit(op), lane=partition),
+                "log_batch", partition, txn, state, writer)
+        return self._recorded(
+            self._observed(self._flush_single(op), lane=partition),
+            "log_batch", partition, txn, state, writer)
+
+    # -- ground truth for the history checker ------------------------------
+    def snapshot(self) -> Dict[Tuple[str, str], Vote]:
+        return self.store.snapshot()
+
+    def writer_of(self, partition: str, txn: str) -> Optional[str]:
+        return self.store.writer_of(partition, txn)
 
 
 # --------------------------------------------------------------------------
@@ -1943,8 +1989,15 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
     # -- leadership leases (epoch ballots over sim time) -------------------
     def _lease_valid(self) -> bool:
         lease = self._lease
+        now = self.sim.now
+        if self.chaos is not None:
+            # Clock skew on the lease clock: positive skew expires leases
+            # early (spurious re-acquisitions), negative skew lets a holder
+            # trust a lease longer than it should — ballots must keep every
+            # outcome safe either way.
+            now += self.chaos.skew_ms()
         return (self.replica_alive(lease.holder)
-                and lease.valid_at(self.sim.now))
+                and lease.valid_at(now))
 
     def _count_fast(self, ballot: Ballot, n_ops: int = 1,
                     holder=None) -> None:
@@ -2315,6 +2368,13 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         acc = {"resps": [], "count": 0}
         self.round_trips += 1
         targets = list(self.member_ids) if ids is None else list(ids)
+        # Torn write: only a prefix of the targets receives this scatter
+        # (the proposer believes it reached everyone).  ``alive_pending``
+        # still ranges over the FULL target list, so a torn round concludes
+        # only via its predicate or ``op_timeout_ms`` — never by mistaking
+        # unreached replicas for answered ones.
+        reached = (targets if self.chaos is None
+                   else self.chaos.torn_targets(targets))
         fwd_by_region: Dict[str, List] = {}
         if also is not None:
             pairs = also if isinstance(also, list) else [also]
@@ -2330,11 +2390,25 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                    else self.topology.rtt_ms(
                        src_region, self.replica_regions[i]) / 2.0)
             service = self.model.sample(self.rng, mean_ms)
+            extra = 0.0
+            if self.chaos is not None:
+                if i not in reached:
+                    continue
+                leg = self.chaos.replica_leg(i)
+                if leg is None:        # request leg lost: never applies
+                    continue
+                extra = leg
 
             def apply(i=i, net=net, service=service):
                 if not self.replica_alive(i):
                     return
                 val = fn(self.replicas[i], i)
+                ack_extra = 0.0
+                if self.chaos is not None:
+                    ack = self.chaos.replica_leg(i)
+                    if ack is None:    # applied, but the ack leg is lost
+                        return
+                    ack_extra = ack
 
                 def respond(i=i, val=val):
                     acc["resps"].append((i, val))
@@ -2346,7 +2420,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                     finish_if(done_pred(acc["resps"])
                               or not alive_pending)
 
-                self.sim._schedule(self.sim.now + net, respond)
+                self.sim._schedule(self.sim.now + net + ack_extra, respond)
                 for fwd_region, cbs in fwd_by_region.items():
                     fwd_net = self.topology.rtt_ms(
                         self.replica_regions[i], fwd_region) / 2.0
@@ -2355,7 +2429,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                         lambda i=i, val=val, cbs=cbs: [cb(i, val)
                                                        for cb in cbs])
 
-            self.sim._schedule(self.sim.now + net + service, apply)
+            self.sim._schedule(self.sim.now + net + extra + service, apply)
         self.sim._schedule(self.sim.now + self.op_timeout_ms,
                            lambda: finish_if(True))
         return done
@@ -2372,12 +2446,18 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                    else self.topology.rtt_ms(
                        src_region, self.replica_regions[i]) / 2.0)
             service = self.model.sample(self.rng, mean_ms)
+            extra = 0.0
+            if self.chaos is not None:
+                leg = self.chaos.replica_leg(i)
+                if leg is None:        # fire-and-forget push lost outright
+                    continue
+                extra = leg
 
             def apply(i=i, net=net, service=service):
                 if self.replica_alive(i):
                     fn(self.replicas[i], i)
 
-            self.sim._schedule(self.sim.now + net + service, apply)
+            self.sim._schedule(self.sim.now + net + extra + service, apply)
 
     # -- leader routing ----------------------------------------------------
     def _via_leader(self, caller: str, inner, forward: Optional[_Forward] = None):
@@ -2806,20 +2886,24 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
             if hit is not None and front is not None:
                 # The txn's log set already holds a terminal record: this
                 # attempt can only read the decision — no Paxos round.
-                return self._cached_answer(hit, writer, fwd, front)
+                return self._recorded(
+                    self._cached_answer(hit, writer, fwd, front),
+                    "log_once", partition, txn, state, writer)
             shared = self._dindex.join(sfkey)
             if shared is not None:
                 # Identical quorum round in flight: share its result.
                 self._dindex.singleflight_hits += 1
                 if fwd is not None:
                     shared.subscribe(lambda e: fwd.deliver_now(e.value))
-                return shared
+                return self._recorded(shared, "log_once", partition, txn,
+                                      state, writer)
         if self._batchable(partition, writer):
             ev = self._submit_batched(
                 _BatchOp("log_once", partition, txn, state, writer, fwd=fwd))
             if self._dindex is not None:
                 self._dindex.lead(sfkey, ev)
-            return self._observed(ev, lane=partition)
+            return self._recorded(self._observed(ev, lane=partition),
+                                  "log_once", partition, txn, state, writer)
 
         def gen():
             if self.mode == "coloc":
@@ -2857,7 +2941,8 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         ev = self.sim.process(gen())
         if self._dindex is not None:
             self._dindex.lead(sfkey, ev)
-        return self._observed(ev, lane=partition)
+        return self._recorded(self._observed(ev, lane=partition),
+                              "log_once", partition, txn, state, writer)
 
     def _log_event(self, partition: str, txn: str, state: Vote, writer: str,
                    mean_ms: float, n_records: int = 1):
@@ -2883,17 +2968,21 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         return self._observed(self.sim.process(gen()), lane=partition)
 
     def log(self, partition: str, txn: str, state: Vote, writer: str = ""):
-        return self._log_event(partition, txn, state, writer,
-                               self.model.plain_write_ms)
+        return self._recorded(
+            self._log_event(partition, txn, state, writer,
+                            self.model.plain_write_ms),
+            "log", partition, txn, state, writer)
 
     def log_batch(self, partition: str, txn: str, state: Vote,
                   n_records: int, writer: str = ""):
         # §5.6 batched record: a pre-formed n_records batch through the same
         # amortization model (and, when active, the same ingress lanes) as
         # storage-side group commit.
-        return self._log_event(partition, txn, state, writer,
-                               self.model.batched_write_ms(n_records),
-                               n_records=n_records)
+        return self._recorded(
+            self._log_event(partition, txn, state, writer,
+                            self.model.batched_write_ms(n_records),
+                            n_records=n_records),
+            "log_batch", partition, txn, state, writer)
 
     def read_state(self, partition: str, txn: str, writer: str = ""):
         self.requests += 1
@@ -2909,7 +2998,8 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
             self._note(partition, txn, result)
             return result
 
-        return self.sim.process(gen())
+        return self._recorded(self.sim.process(gen()), "read", partition,
+                              txn, None, writer)
 
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
         """Merged view over every MEMBER replica's disk (ground truth for

@@ -70,6 +70,12 @@ class StoreConfig:
     # control plane, so cache hits and singleflight joiners skip it.
     # 0 (the default) constructs the plain store — bit-identical.
     service_delay_ms: float = 0.0
+    # Threaded-store chaos decorator (core.chaos.ChaosStore): per-op
+    # injected delay/jitter and drop→retry with exponential backoff.
+    # Both 0 (the default) skips the wrapper entirely — bit-identical.
+    chaos_drop_p: float = 0.0
+    chaos_delay_ms: float = 0.0
+    chaos_jitter_ms: float = 0.0
 
 
 _REGISTRY: Dict[str, Callable] = {}
@@ -119,6 +125,12 @@ def build_store(cfg: StoreConfig, sim=None):
     if cfg.batching and not simulated:
         store = BatchingStore(store, window_s=cfg.window_s,
                               max_batch=cfg.max_batch)
+    if not simulated and (cfg.chaos_drop_p > 0 or cfg.chaos_delay_ms > 0
+                          or cfg.chaos_jitter_ms > 0):
+        from .chaos import ChaosStore
+        store = ChaosStore(store, seed=cfg.seed, drop_p=cfg.chaos_drop_p,
+                           delay_ms=cfg.chaos_delay_ms,
+                           jitter_ms=cfg.chaos_jitter_ms)
     return store
 
 

@@ -17,7 +17,9 @@ import sys
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from ..core.chaos import FaultSchedule, GuardedStorage, Nemesis
 from ..core.control import AdaptiveTimeouts, DecisionCacheConfig
+from ..core.history import HistoryRecorder, check_history
 from ..core.protocol import Cluster, ProtocolConfig
 from ..core.protocols import get_protocol
 from ..core.sim import Sim
@@ -133,6 +135,23 @@ class BenchConfig:
     # storm feeds).  NO-WAIT conflicts detected before the protocol runs
     # leave no records and are unaffected either way.
     retry_fresh_ids: bool = False
+    # --- chaos plane / history checker (all default-off) -------------------
+    # A core.chaos.FaultSchedule to inject (message chaos, partitions,
+    # clock skew, torn writes, crash–restarts).  None arms nothing: the
+    # run is bit-identical to the pre-chaos executor.
+    chaos: Optional[FaultSchedule] = None
+    # Record every storage op + decision into a core.history recorder and
+    # run the AC1–AC3 / writer-of / recoverability checker post-run
+    # (results in BenchResult.violations / .violation_details).
+    record_history: bool = False
+    # Wrap storage ops in the retry + per-partition circuit-breaker guard.
+    # None (default) = auto: guarded exactly when a chaos schedule is set
+    # (chaos-eaten ops leave events forever untriggered; only idempotent
+    # re-issue recovers them).  True/False forces it either way.
+    storage_guard: Optional[bool] = None
+    # Extra (node, crash_at_ms, restart_at_ms) crash–restarts armed on the
+    # cluster directly (the schedule's own crashes ride cfg.chaos).
+    crash_restarts: tuple = ()
 
 
 @dataclass
@@ -183,6 +202,25 @@ class BenchResult:
     decision_cache_hits: int = 0
     singleflight_hits: int = 0
     decisions_pushed: int = 0
+    # Fault attribution (all zero without a chaos schedule): what the
+    # nemesis actually injected, what the delivery guard suppressed, what
+    # the retry/breaker layer absorbed, and how many crash–restart
+    # recoveries ran.  ``violations`` is the history checker's verdict
+    # (−1 = checker not run; details capped for picklability).
+    msgs_dropped: int = 0
+    msgs_duplicated: int = 0
+    msgs_delayed: int = 0
+    msgs_reordered: int = 0
+    partitions_healed: int = 0
+    torn_writes: int = 0
+    duplicate_deliveries: int = 0
+    guard_retries: int = 0
+    breaker_trips: int = 0
+    breaker_half_opens: int = 0
+    crash_restarts: int = 0
+    recoveries_run: int = 0
+    violations: int = -1
+    violation_details: List[str] = field(default_factory=list)
 
     @staticmethod
     def _avg(xs: List[float]) -> float:
@@ -217,7 +255,20 @@ class BenchResult:
                 "prepare": self._avg(self.prepare_ms),
                 "commit": self._avg(self.commit_ms),
                 "p50": self.p50_latency_ms,
-                "p95": self.p95_latency_ms}
+                "p95": self.p95_latency_ms,
+                "msgs_dropped": self.msgs_dropped,
+                "msgs_duplicated": self.msgs_duplicated,
+                "msgs_delayed": self.msgs_delayed,
+                "msgs_reordered": self.msgs_reordered,
+                "partitions_healed": self.partitions_healed,
+                "torn_writes": self.torn_writes,
+                "duplicate_deliveries": self.duplicate_deliveries,
+                "guard_retries": self.guard_retries,
+                "breaker_trips": self.breaker_trips,
+                "breaker_half_opens": self.breaker_half_opens,
+                "crash_restarts": self.crash_restarts,
+                "recoveries_run": self.recoveries_run,
+                "violations": self.violations}
 
 
 def run_bench(workload_factory, model: LatencyModel,
@@ -288,7 +339,32 @@ def run_bench(workload_factory, model: LatencyModel,
                           push_decisions=cfg.decision_push,
                           termination_dedup=cfg.termination_dedup,
                           timeout_policy=policy)
+    # --- chaos plane + history checker (all no-ops when unarmed) ----------
+    history = None
+    if cfg.record_history:
+        history = HistoryRecorder(sim)
+        storage.history = history       # sim services: subscription-only
+    use_guard = (cfg.storage_guard if cfg.storage_guard is not None
+                 else cfg.chaos is not None)
+    raw_storage = storage
+    if use_guard:
+        # Per-attempt deadline above the service's own worst case, so the
+        # guard only re-issues ops chaos genuinely ate (idempotent: LogOnce
+        # re-issues read the winner).
+        deadline = max(30.0, 1.5 * tmo,
+                       getattr(storage, "op_timeout_ms", 0.0) + 10.0)
+        storage = GuardedStorage(storage, sim, seed=cfg.seed,
+                                 deadline_ms=deadline)
     cluster = Cluster(sim, storage, nodes, pcfg)
+    nemesis = None
+    if cfg.chaos is not None:
+        nemesis = Nemesis(cfg.chaos, sim).attach(
+            transport=cluster.transport, storage=raw_storage,
+            cluster=cluster)
+    for node, crash_at, restart_at in cfg.crash_restarts:
+        cluster.schedule_crash_restart(node, crash_at, restart_at)
+    crashes_armed = bool(cfg.crash_restarts) or (
+        cfg.chaos is not None and bool(cfg.chaos.crashes))
     locks = {n: LockTable(n) for n in nodes}
 
     def release(node: str, txn: str, *_):
@@ -303,6 +379,13 @@ def run_bench(workload_factory, model: LatencyModel,
 
     def client(node: str, cid: int):
         while sim.now < cfg.horizon_ms:
+            if crashes_armed and not cluster.alive(node):
+                # Crashed node: its closed-loop clients are down too; they
+                # resume issuing once the node restarts.  Only evaluated
+                # when crash–restarts are armed, so ordinary runs never
+                # consult liveness here (bit-identical).
+                yield sim.timeout(5.0)
+                continue
             txn = workload.next_txn(node)
             t_arrive = sim.now
             abort_time = 0.0
@@ -402,6 +485,27 @@ def run_bench(workload_factory, model: LatencyModel,
     res.decision_cache_hits = getattr(storage, "decision_cache_hits", 0)
     res.singleflight_hits = getattr(storage, "singleflight_hits", 0)
     res.decisions_pushed = getattr(storage, "decisions_pushed", 0)
+    # Fault attribution + machine-checked safety (zero / -1 when unarmed).
+    if nemesis is not None:
+        res.msgs_dropped = nemesis.msgs_dropped
+        res.msgs_duplicated = nemesis.msgs_duplicated
+        res.msgs_delayed = nemesis.msgs_delayed
+        res.msgs_reordered = nemesis.msgs_reordered
+        res.partitions_healed = nemesis.partitions_healed
+        res.torn_writes = nemesis.torn_writes
+    res.duplicate_deliveries = cluster.transport.duplicate_deliveries
+    if use_guard:
+        res.guard_retries = storage.retries
+        res.breaker_trips = storage.breaker.trips
+        res.breaker_half_opens = storage.breaker.half_opens
+    res.crash_restarts = cluster.crash_restarts
+    res.recoveries_run = cluster.recoveries_run
+    if cfg.record_history:
+        found = check_history(history, cluster.ctx,
+                              snapshot=raw_storage.snapshot(),
+                              participant_logs=proto_cls.participant_logs)
+        res.violations = len(found)
+        res.violation_details = [str(v) for v in found[:20]]
     return res
 
 
