@@ -52,7 +52,14 @@ GAVEUP_FRAC_BOUND = 0.05        # gaveups / issued txns per cell
 # The keys a repro bundle's config carries — exactly what replay needs to
 # reconstruct the BenchConfig (the schedule itself rides separately).
 CONFIG_KEYS = ("protocol", "n_nodes", "threads_per_node", "horizon_ms",
-               "seed", "replication", "retry_fresh_ids")
+               "seed", "replication", "retry_fresh_ids", "lifecycle")
+# The "rot" mix arms durable-state faults (bit-flips, torn tails, GC-pulse
+# truncation) — it only makes sense with the lifecycle layer on, so run_one
+# arms checksums+gc+scrub for it.  The baselined sweep() grid (MIXES) is
+# untouched: BENCH_chaos.json stays bit-identical.
+LIFECYCLE_MIXES = ("rot",)
+LIFECYCLE_CFG = dict(checksums=True, gc=True, scrub=True,
+                     gc_interval_ms=25.0, scrub_interval_ms=40.0)
 
 
 def _wl(nodes, seed):
@@ -70,7 +77,9 @@ def run_one(proto: str, mix: str, replication: int, seed: int,
     cfg = BenchConfig(protocol=proto, n_nodes=4, threads_per_node=2,
                       horizon_ms=horizon_ms, seed=seed,
                       replication=replication, retry_fresh_ids=True,
-                      chaos=sched, record_history=True)
+                      chaos=sched, record_history=True,
+                      lifecycle=(dict(LIFECYCLE_CFG)
+                                 if mix in LIFECYCLE_MIXES else None))
     res = run_bench(_wl, AZURE_REDIS, cfg)
     config = {k: getattr(cfg, k) for k in CONFIG_KEYS}
     return res, sched, config
@@ -107,7 +116,11 @@ def sweep(quick: bool = False) -> List[Row]:
                            f"restarts={res.crash_restarts} "
                            f"recov={res.recoveries_run} "
                            f"guard_retries={res.guard_retries} "
-                           f"trips={res.breaker_trips}")
+                           f"trips={res.breaker_trips} "
+                           f"scrub={res.scrub_repairs} "
+                           f"quar={res.quarantines} "
+                           f"gc={res.gc_truncations} "
+                           f"wml={res.watermark_lag}")
                 rows.append((f"{cell}/tput_tps", res.throughput_tps,
                              derived))
                 rows.append((f"{cell}/violations", float(res.violations),
@@ -154,12 +167,13 @@ def _check_safety(rows: List[Row]) -> bool:
 # ---------------------------------------------------------------------------
 def verify_schedules(n: int, horizon_ms: float = 300.0) -> int:
     cells = [(p, r) for p in registered_protocols() for r in (1, 3)]
+    mixes = MIXES + LIFECYCLE_MIXES
     bad = 0
     recoveries: Dict[str, int] = {}
     t0 = time.time()
     for i in range(n):
         proto, replication = cells[i % len(cells)]
-        mix = MIXES[(i // len(cells)) % len(MIXES)]
+        mix = mixes[(i // len(cells)) % len(mixes)]
         res, sched, config = run_one(proto, mix, replication, seed=i,
                                      horizon_ms=horizon_ms)
         recoveries[proto] = recoveries.get(proto, 0) + res.recoveries_run

@@ -116,7 +116,11 @@ def sweep(quick: bool = False, replication: int = 3) -> List[Row]:
                                f"dedup={r.dedup_hits} "
                                f"cache={r.decision_cache_hits} "
                                f"sf={r.singleflight_hits} "
-                               f"push={r.decisions_pushed}")
+                               f"push={r.decisions_pushed} "
+                               f"scrub={r.scrub_repairs} "
+                               f"quar={r.quarantines} "
+                               f"gc={r.gc_truncations} "
+                               f"wml={r.watermark_lag}")
                     rows.append((f"{key}/tput_tps", r.throughput_tps, derived))
                     rows.append((f"{key}/avg_ms", r.avg_latency_ms,
                                  f"p50={r.p50_latency_ms:.2f} "

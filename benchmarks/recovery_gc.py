@@ -1,0 +1,163 @@
+"""Bounded-time recovery: restart-scan time vs. history length, with GC.
+
+The durable-state lifecycle's promise is that crash recovery is bounded by
+the RETAINED log, not by everything the deployment ever wrote: the GC
+low-watermark truncates slots whose transactions are settled (terminal
+decision durable on a quorum), so a restarting node's in-doubt scan only
+probes the post-watermark suffix.  Without GC the scan grows linearly with
+history; with GC it stays flat.
+
+Grid: {cornus, 2pc} × gc ∈ {off, on} × history ∈ {short, long} (the long
+window is 4× the short one), mostly at R=1 plus one replicated cell.  Each
+cell crashes one node near the end of the issue window and restarts it just
+before the horizon; the measured value is the durable restart scan's wall
+time (``BenchResult.recovery_spans``) and the number of slots it probed.
+
+The ``--check-baseline`` gate asserts, beyond the usual throughput pins:
+
+  * GC-enabled recovery stays BOUNDED: the long-history scan takes at most
+    ``GC_FLAT_BOUND``× the short-history scan (flat in history length),
+  * GC-disabled recovery GROWS: the long-history scan probes at least
+    ``NOGC_GROWTH_FLOOR``× the slots of the short one (the bound is real,
+    not an artifact of a scan that never grew),
+  * every run is machine-certified: zero checker violations (AC1–AC3,
+    writer-of, recoverability, AC-GC) in every cell.
+
+Standalone entry points::
+
+    python -m benchmarks.recovery_gc --quick --check-baseline
+    python -m benchmarks.recovery_gc --quick --write-baseline
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List
+
+from repro.core import AZURE_REDIS
+from repro.txn import BenchConfig, YCSBWorkload, run_bench
+
+from benchmarks._baseline import Row, gate_main
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_recovery.json")
+PROTOS = ("cornus", "2pc")
+GC_FLAT_BOUND = 1.5      # gc-on: long-history scan time <= 1.5x short
+NOGC_GROWTH_FLOOR = 1.3  # gc-off: long-history probed slots >= 1.3x short
+LIFECYCLE_GC = dict(checksums=True, gc=True, gc_interval_ms=25.0)
+LIFECYCLE_NOGC = dict(checksums=True, gc=False)
+
+
+def _wl(nodes, seed):
+    return YCSBWorkload(nodes, seed=seed)
+
+
+def run_one(proto: str, gc: bool, horizon_ms: float, replication: int = 1,
+            seed: int = 7):
+    """One cell: run ``horizon_ms`` of traffic, crash n1 late, restart it
+    just before the horizon, measure the durable restart scan."""
+    crash_at = 0.85 * horizon_ms
+    restart_at = 0.90 * horizon_ms
+    cfg = BenchConfig(protocol=proto, n_nodes=4, threads_per_node=2,
+                      horizon_ms=horizon_ms, seed=seed,
+                      replication=replication, retry_fresh_ids=True,
+                      record_history=True,
+                      lifecycle=dict(LIFECYCLE_GC if gc else LIFECYCLE_NOGC),
+                      crash_restarts=(("n1", crash_at, restart_at),))
+    return run_bench(_wl, AZURE_REDIS, cfg)
+
+
+def _scan(res) -> tuple:
+    """(scan_ms, slots_scanned) of n1's durable restart (0, 0 if absent)."""
+    for node, t0, t1, scanned in res.recovery_spans:
+        if node == "n1":
+            return (t1 - t0, scanned)
+    return (0.0, 0)
+
+
+def sweep(quick: bool = False) -> List[Row]:
+    short = 400.0 if quick else 800.0
+    long_ = 4.0 * short
+    rows: List[Row] = []
+    for proto in PROTOS:
+        for gc in (False, True):
+            for label, horizon in (("short", short), ("long", long_)):
+                res = run_one(proto, gc, horizon)
+                scan_ms, scanned = _scan(res)
+                cell = f"recovery/{proto}/gc{'on' if gc else 'off'}/{label}"
+                derived = (f"commits={res.commits} scanned={scanned} "
+                           f"recov={res.recoveries_run} "
+                           f"gc={res.gc_truncations} "
+                           f"wml={res.watermark_lag} "
+                           f"viol={res.violations}")
+                rows.append((f"{cell}/tput_tps", res.throughput_tps,
+                             derived))
+                rows.append((f"{cell}/scan_ms", scan_ms,
+                             f"durable restart wall time, {scanned} slots"))
+                rows.append((f"{cell}/scanned", float(scanned),
+                             "slots probed by the restart scan"))
+                rows.append((f"{cell}/violations", float(res.violations),
+                             "AC1-AC3 + writer-of + recoverability + AC-GC"))
+    # One replicated cell: the watermark census must settle through the
+    # quorum rule, not single-volume presence.
+    res = run_one("cornus", True, short, replication=3)
+    scan_ms, scanned = _scan(res)
+    rows.append(("recovery/cornus/r3/gcon/tput_tps", res.throughput_tps,
+                 f"commits={res.commits} scanned={scanned} "
+                 f"gc={res.gc_truncations} viol={res.violations}"))
+    rows.append(("recovery/cornus/r3/gcon/scan_ms", scan_ms,
+                 f"durable restart wall time, {scanned} slots"))
+    rows.append(("recovery/cornus/r3/gcon/violations",
+                 float(res.violations), "checker verdict"))
+    return rows
+
+
+def _vals(rows: List[Row], suffix: str) -> dict:
+    return {name: value for name, value, _ in rows
+            if name.endswith(suffix)}
+
+
+def _check_bounds(rows: List[Row]) -> bool:
+    ok = True
+    scans = _vals(rows, "/scan_ms")
+    scanned = _vals(rows, "/scanned")
+    for name, value in sorted(_vals(rows, "/violations").items()):
+        if value != 0:
+            print(f"# safety REGRESSION: {name} = {value:.0f} (must be 0)",
+                  file=sys.stderr)
+            ok = False
+    for proto in PROTOS:
+        s = scans.get(f"recovery/{proto}/gcon/short/scan_ms", 0.0)
+        l = scans.get(f"recovery/{proto}/gcon/long/scan_ms", 0.0)
+        bound = GC_FLAT_BOUND * max(s, 1e-9)
+        if l > bound:
+            print(f"# recovery-bound REGRESSION: {proto} gc-on long scan "
+                  f"{l:.2f}ms > {GC_FLAT_BOUND}x short ({s:.2f}ms)",
+                  file=sys.stderr)
+            ok = False
+        ns = scanned.get(f"recovery/{proto}/gcoff/short/scanned", 0.0)
+        nl = scanned.get(f"recovery/{proto}/gcoff/long/scanned", 0.0)
+        if nl < NOGC_GROWTH_FLOOR * max(ns, 1.0):
+            print(f"# growth-control REGRESSION: {proto} gc-off long scan "
+                  f"probed {nl:.0f} slots, expected >= "
+                  f"{NOGC_GROWTH_FLOOR}x short ({ns:.0f})", file=sys.stderr)
+            ok = False
+    if ok:
+        print("# recovery bounds ok: gc-on scans flat in history length, "
+              "gc-off scans grow, zero violations", file=sys.stderr)
+    return ok
+
+
+def main() -> None:
+    gate_main(
+        description=__doc__.splitlines()[0],
+        sweep=sweep,
+        baseline_path=BASELINE_PATH,
+        bench_name="benchmarks.recovery_gc --quick",
+        error_msg="recovery/GC sweep regressed against BENCH_recovery.json "
+                  "or broke the bounded-recovery invariant",
+        extra_check=_check_bounds)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ Public surface:
   chaos      – seeded FaultSchedule + Nemesis fault injection, retry
                policy / circuit breaker, failure-repro bundles
   history    – operation histories + AC1–AC3 / writer-of /
-               recoverability checker (machine-verified safety)
+               recoverability / AC-GC checker (machine-verified safety)
+  lifecycle  – checksummed record framing, LifecycleConfig, GC journal
 """
 from .sim import Sim
 from .state import Decision, TxnOutcome, TxnSpec, Vote, global_decision
@@ -28,12 +29,14 @@ from .storage import (AZURE_BLOB, AZURE_BLOB_SEPARATE_ACL, AZURE_REDIS,
                       StoreLease, merge_reads)
 from .stores import (StoreConfig, build_store, get_store,
                      register_store, registered_stores)
-from .chaos import (ChaosStore, CircuitBreaker, ClockSkew, CrashRestart,
-                    FaultSchedule, GuardedStorage, LinkChaos, Nemesis,
-                    NetPartition, RetryPolicy, TornWrite, load_repro_bundle,
-                    write_repro_bundle)
+from .chaos import (BitFlip, ChaosStore, CircuitBreaker, ClockSkew,
+                    CrashRestart, FaultSchedule, GuardedStorage, LinkChaos,
+                    Nemesis, NetPartition, RetryPolicy, TornTail, TornWrite,
+                    Truncation, load_repro_bundle, write_repro_bundle)
 from .history import (HistoryOp, HistoryRecorder, Violation, check_history,
                       check_run, collect_decisions)
+from .lifecycle import (CorruptRecord, GcEntry, LifecycleConfig,
+                        decode_record, encode_record)
 from .protocols import (CommitProtocol, Transport, TxnContext, get_protocol,
                         register, registered_protocols)
 from .protocol import Cluster, ProtocolConfig
@@ -59,9 +62,12 @@ __all__ = [
     "StoreConfig", "build_store", "get_store",
     "register_store", "registered_stores",
     "FaultSchedule", "Nemesis", "LinkChaos", "NetPartition", "ClockSkew",
-    "TornWrite", "CrashRestart", "RetryPolicy", "CircuitBreaker",
+    "TornWrite", "CrashRestart", "BitFlip", "TornTail", "Truncation",
+    "RetryPolicy", "CircuitBreaker",
     "GuardedStorage", "ChaosStore", "write_repro_bundle",
     "load_repro_bundle",
     "HistoryOp", "HistoryRecorder", "Violation", "check_history",
     "check_run", "collect_decisions",
+    "CorruptRecord", "GcEntry", "LifecycleConfig",
+    "encode_record", "decode_record",
 ]

@@ -41,7 +41,8 @@ from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["LinkChaos", "NetPartition", "ClockSkew", "TornWrite",
-           "CrashRestart", "FaultSchedule", "Nemesis", "RetryPolicy",
+           "CrashRestart", "BitFlip", "TornTail", "Truncation",
+           "FaultSchedule", "Nemesis", "RetryPolicy",
            "CircuitBreaker", "GuardedStorage", "ChaosStore",
            "write_repro_bundle", "load_repro_bundle", "STORAGE", "replica"]
 
@@ -146,9 +147,51 @@ class CrashRestart:
     restart_at: float
 
 
+@dataclass
+class BitFlip:
+    """Durable-state bit-rot: at ``at``, flip ``count`` bytes in the bodies
+    of randomly chosen *repairable* records (slots whose txn has another
+    intact terminal copy — on a sibling slot, or on another replica at
+    R>1).  The checksummed record format must detect the rot, surface a
+    typed ``CorruptRecord``, and repair it; without checksums this fault
+    would silently serve garbage."""
+
+    at: float
+    count: int = 1
+
+
+@dataclass
+class TornTail:
+    """With probability ``p``, a non-decision single-store write on
+    [at, until) both loses its response AND leaves a torn (truncated)
+    durable frame — the classic crash-mid-write.  Safe for the reader to
+    treat as absent precisely because the response was lost: the record
+    was never acknowledged."""
+
+    at: float
+    until: float
+    p: float
+
+    def active(self, t: float) -> bool:
+        return self.at <= t < self.until
+
+
+@dataclass
+class Truncation:
+    """GC pulse train: run the store's watermark truncation pass at ``at``
+    and then every ``every_ms`` until ``until`` (one-shot if
+    ``every_ms == 0``).  Lets schedules interleave truncation with crashes
+    and partitions, which is exactly what AC-GC certifies."""
+
+    at: float
+    every_ms: float = 0.0
+    until: float = 0.0
+
+
 _FAULT_KINDS = {"links": LinkChaos, "partitions": NetPartition,
                 "skews": ClockSkew, "torn": TornWrite,
-                "crashes": CrashRestart}
+                "crashes": CrashRestart, "bitflips": BitFlip,
+                "torn_tails": TornTail, "truncations": Truncation}
 
 
 @dataclass
@@ -162,6 +205,10 @@ class FaultSchedule:
     skews: List[ClockSkew] = field(default_factory=list)
     torn: List[TornWrite] = field(default_factory=list)
     crashes: List[CrashRestart] = field(default_factory=list)
+    # Durable-state faults (default-empty keeps old bundles loading).
+    bitflips: List[BitFlip] = field(default_factory=list)
+    torn_tails: List[TornTail] = field(default_factory=list)
+    truncations: List[Truncation] = field(default_factory=list)
 
     # -- serialization (the failure-repro bundle rides on this) ------------
     def to_dict(self) -> dict:
@@ -197,8 +244,13 @@ class FaultSchedule:
         reorder), ``partition`` (timed symmetric+asymmetric cuts),
         ``crash`` (coordinator/participant crash–restarts), ``torn``
         (partial scatters + replica-link chaos), ``skew`` (lease clock
-        skew), or ``full`` (all of them, lighter individual rates)."""
-        known = ("messages", "partition", "crash", "torn", "skew", "full")
+        skew), ``rot`` (durable-state decay: bit-flips, torn write tails,
+        GC truncation pulses, plus one crash–restart so recovery replays
+        the decayed log), or ``full`` (all of the classic families,
+        lighter individual rates — ``rot`` stays opt-in so pre-lifecycle
+        schedules keep their exact rng draw sequences)."""
+        known = ("messages", "partition", "crash", "torn", "skew", "full",
+                 "rot")
         if mix not in known:
             raise ValueError(f"unknown fault mix {mix!r} "
                              f"(one of: {', '.join(known)})")
@@ -263,6 +315,33 @@ class FaultSchedule:
             sched.skews.append(ClockSkew(
                 at=at, until=until,
                 skew_ms=rng.choice([-1.0, 1.0]) * rng.uniform(50.0, 400.0)))
+        if mix == "rot":
+            # Durable-state decay.  ALL rng draws for this family happen
+            # only inside this branch: pre-existing mixes' schedules stay
+            # bit-identical.
+            for _ in range(rng.randint(1, 3)):
+                sched.bitflips.append(BitFlip(
+                    at=rng.uniform(0.1, 0.8) * horizon_ms,
+                    count=rng.randint(1, 2)))
+            at, until = window(0.1, 0.5)
+            sched.torn_tails.append(TornTail(
+                at=at, until=until, p=rng.uniform(0.1, 0.35)))
+            # Torn tails ride the lose-response path: arm a storage-link
+            # loss window overlapping the torn window so responses are
+            # actually lost there.
+            sched.links.append(LinkChaos(
+                src="*", dst=STORAGE, at=at, until=until,
+                drop_p=rng.uniform(0.05, 0.2),
+                delay_ms=rng.uniform(0.0, 1.0)))
+            sched.truncations.append(Truncation(
+                at=rng.uniform(0.05, 0.2) * horizon_ms,
+                every_ms=rng.uniform(20.0, 45.0),
+                until=horizon_ms))
+            at = rng.uniform(0.2, 0.7) * horizon_ms
+            down = rng.uniform(0.05, 0.2) * horizon_ms
+            sched.crashes.append(CrashRestart(
+                node=rng.choice(nodes), at=at,
+                restart_at=min(at + down, horizon_ms * 0.95)))
         return sched
 
 
@@ -291,6 +370,9 @@ class Nemesis:
         self.msgs_reordered = 0
         self.partitions_healed = 0
         self.torn_writes = 0
+        self.bit_flips = 0
+        self.torn_tails = 0
+        self.gc_pulses = 0
 
     # -- wiring -------------------------------------------------------------
     def attach(self, transport=None, storage=None, cluster=None) -> "Nemesis":
@@ -307,7 +389,31 @@ class Nemesis:
         if cluster is not None:
             for c in self.schedule.crashes:
                 cluster.schedule_crash_restart(c.node, c.at, c.restart_at)
+        if storage is not None:
+            inner = getattr(storage, "inner", storage)
+            # Durable-state faults target the lifecycle hooks; a store
+            # without them (lifecycle off / threaded) simply ignores them.
+            if self.schedule.bitflips and hasattr(inner, "bitflip"):
+                for bf in self.schedule.bitflips:
+                    self.sim._schedule(
+                        bf.at, lambda bf=bf: self._flip(inner, bf.count))
+            if self.schedule.truncations and hasattr(inner, "gc_pass"):
+                for tr in self.schedule.truncations:
+                    self.sim._schedule(
+                        tr.at, lambda tr=tr: self._gc_pulse(inner, tr))
         return self
+
+    def _flip(self, storage, count: int) -> None:
+        for _ in range(count):
+            if storage.bitflip(self.rng):
+                self.bit_flips += 1
+
+    def _gc_pulse(self, storage, tr: Truncation) -> None:
+        self.gc_pulses += 1
+        storage.gc_pass(self.sim.now)
+        nxt = self.sim.now + tr.every_ms
+        if tr.every_ms > 0.0 and nxt < tr.until:
+            self.sim._schedule(nxt, lambda: self._gc_pulse(storage, tr))
 
     def _healed(self) -> None:
         self.partitions_healed += 1
@@ -374,6 +480,18 @@ class Nemesis:
                 self.torn_writes += 1
                 return targets[:max(1, min(tw.keep, len(targets)))]
         return targets
+
+    def torn_tail(self) -> bool:
+        """Should the current lost-response single-store write ALSO leave a
+        torn durable frame?  Consulted by ``SimStorage._op`` only on the
+        lose-response path of a non-decision write, so the torn record was
+        by construction never acknowledged."""
+        t = self.sim.now
+        for tt in self.schedule.torn_tails:
+            if tt.active(t) and self.rng.random() < tt.p:
+                self.torn_tails += 1
+                return True
+        return False
 
     def skew_ms(self) -> float:
         """Clock skew the storage service applies to lease deadlines NOW."""

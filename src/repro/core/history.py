@@ -24,6 +24,11 @@ that evidence instead of trusting the protocols' own bookkeeping:
        future ``recover()`` re-derives COMMIT (Definition 1).  The abort
        direction is deliberately unchecked — presumed abort legally
        leaves all-yes logs behind for aborted coordinators.
+  AC-GC truncation preserves recoverability: every slot the GC watermark
+       removed was settled (its txn's terminal decision durable) when it
+       was removed, the journaled decision matches what the nodes
+       actually decided, and a committed txn's missing snapshot slot is
+       only forgiven when the truncation journal holds its COMMIT.
 
 Recording is observation-only (list appends + event subscriptions): with
 ``history is None`` — the default — every run is bit-identical to one
@@ -119,9 +124,11 @@ def check_history(history: Optional[HistoryRecorder], ctx,
                   specs: Optional[Dict[str, TxnSpec]] = None,
                   snapshot: Optional[Dict[Tuple[str, str], Vote]] = None,
                   participant_logs: bool = True,
+                  gc_log: Optional[Sequence] = None,
                   ) -> List[Violation]:
-    """Validate AC1–AC3 + writer-of + recoverability; returns violations
-    (empty = the run is certified).
+    """Validate AC1–AC3 + writer-of + recoverability (+ AC-GC when a
+    truncation journal is supplied); returns violations (empty = the run
+    is certified).
 
     Every rule is deliberately one-sided so chaos cannot manufacture false
     positives: stale reads are legal (only *conflicting terminal* slot
@@ -132,6 +139,26 @@ def check_history(history: Optional[HistoryRecorder], ctx,
     specs = specs if specs is not None else getattr(ctx, "specs", {})
     violations: List[Violation] = []
     decisions = collect_decisions(ctx)
+    gc_index: Dict[Tuple[str, str], object] = {}
+    if gc_log:
+        for e in gc_log:
+            gc_index[(e.partition, e.txn)] = e
+        # AC-GC — every truncation was justified and journaled truthfully.
+        for e in gc_log:
+            if not e.settled or e.decision is None:
+                violations.append(Violation(
+                    "AC-GC", e.txn,
+                    f"slot {e.partition} truncated while unsettled "
+                    f"(journal decision={e.decision})"))
+                continue
+            by_node = decisions.get(e.txn)
+            if by_node:
+                reached = {d.value for d in by_node.values()}
+                if e.decision not in reached:
+                    violations.append(Violation(
+                        "AC-GC", e.txn,
+                        f"journal says {e.decision} but nodes decided "
+                        f"{sorted(reached)}"))
 
     for txn, by_node in sorted(decisions.items()):
         spec = specs.get(txn)
@@ -176,17 +203,27 @@ def check_history(history: Optional[HistoryRecorder], ctx,
                     if p in spec.read_only:
                         continue
                     v = snapshot.get((p, txn))
-                    if v not in (Vote.VOTE_YES, Vote.COMMIT):
-                        violations.append(Violation(
-                            "recoverability", txn,
-                            f"committed but {p}'s durable slot is {v}"))
+                    if v in (Vote.VOTE_YES, Vote.COMMIT):
+                        continue
+                    # A truncated slot is recoverable through the GC
+                    # journal's tombstone — but ONLY if it holds COMMIT.
+                    e = gc_index.get((p, txn))
+                    if v is None and e is not None \
+                            and e.decision == Vote.COMMIT.value:
+                        continue
+                    violations.append(Violation(
+                        "recoverability", txn,
+                        f"committed but {p}'s durable slot is {v}"))
             elif snapshot is not None:
                 v = snapshot.get((spec.coordinator, txn))
                 if v != Vote.COMMIT:
-                    violations.append(Violation(
-                        "recoverability", txn,
-                        f"committed but coordinator {spec.coordinator}'s "
-                        f"durable record is {v}"))
+                    e = gc_index.get((spec.coordinator, txn))
+                    if not (v is None and e is not None
+                            and e.decision == Vote.COMMIT.value):
+                        violations.append(Violation(
+                            "recoverability", txn,
+                            f"committed but coordinator {spec.coordinator}'s "
+                            f"durable record is {v}"))
 
     if history is not None:
         # AC3 — no slot ever serves both terminal values.
@@ -217,4 +254,5 @@ def check_run(ctx, storage=None,
     if storage is not None and hasattr(storage, "snapshot"):
         snapshot = storage.snapshot()
     return check_history(history, ctx, snapshot=snapshot,
-                         participant_logs=participant_logs)
+                         participant_logs=participant_logs,
+                         gc_log=getattr(storage, "gc_log", None))

@@ -55,6 +55,9 @@ class Cluster:
         # recover() runs the restarts triggered for in-doubt txns.
         self.crash_restarts = 0
         self.recoveries_run = 0
+        # (node, t_crash_restart, t_done, slots_scanned) per durable
+        # restart scan — the recovery-time bound the GC bench gates.
+        self.recovery_spans: List[Tuple[str, float, float, int]] = []
 
     # -- liveness (delegated to the transport) ------------------------------
     @property
@@ -143,6 +146,13 @@ class Cluster:
         # they modelled died with the crash.
         tr = self.transport
         tr.incarnations[node] = tr.incarnation(node) + 1
+        if getattr(self.storage, "lifecycle", None) is not None:
+            # Lifecycle armed: recovery is bounded by the durable log, not
+            # the full in-memory spec table — scan only the node's retained
+            # (post-watermark) slots.  This is what makes recovery time
+            # flat in history length once GC runs.
+            self.sim.process(self._durable_restart(node))
+            return
         for txn_id, spec in list(self.ctx.specs.items()):
             if node not in spec.participants and node != spec.coordinator:
                 continue
@@ -154,3 +164,45 @@ class Cluster:
                 continue                       # already resolved by recovery
             self.recoveries_run += 1
             self.sim.process(self.protocol.recover(spec, node))
+
+    def _durable_restart(self, node: str):
+        """Generator process: probe the node's retained durable slots (its
+        own partition's post-watermark suffix), then run ``recover()`` for
+        the ones still unresolved.  Probe reads go out in parallel batches
+        so the scan's wall time reflects storage round trips, not
+        serialized latency; truncated slots never appear (the watermark
+        already settled them), which is the entire recovery bound.
+
+        A node with no durable record of a txn (e.g. a CL participant —
+        ``participant_logs=False``) has nothing in doubt: presumed abort
+        covers it exactly as a real restart from an empty log would.
+        """
+        t0 = self.sim.now
+        keys = list(self.storage.partition_log(node))
+        scanned = 0
+        in_doubt: List[str] = []
+        B = 32
+        for lo in range(0, len(keys), B):
+            chunk = keys[lo:lo + B]
+            evs = [self.storage.read_state(p, t, writer=node)
+                   for (p, t) in chunk]
+            for (p, txn_id), ev in zip(chunk, evs):
+                st = yield ev
+                scanned += 1
+                if st is not None and getattr(st, "is_decision",
+                                              lambda: False)():
+                    continue                   # settled on disk
+                in_doubt.append(txn_id)
+        for txn_id in in_doubt:
+            spec = self.ctx.specs.get(txn_id)
+            if spec is None:
+                continue
+            st = self.ctx.local.get((node, txn_id))
+            if st is not None and st.get("decision") is not None:
+                continue                       # decided before the crash
+            prev = self.ctx.outcomes.get((txn_id, node + ":recovery"))
+            if prev is not None and prev.decision != Decision.UNDETERMINED:
+                continue                       # already resolved by recovery
+            self.recoveries_run += 1
+            yield self.sim.process(self.protocol.recover(spec, node))
+        self.recovery_spans.append((node, t0, self.sim.now, scanned))

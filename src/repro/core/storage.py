@@ -28,11 +28,14 @@ import os
 import random
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .control import (DecisionCacheConfig, DecisionIndex, EwmaStat,
                       QuorumUnavailable, ThreadControlPlane)
+from .lifecycle import (CorruptRecord, GcEntry, LifecycleConfig,
+                        RECORD_MAGIC, decode_record, encode_record)
 from .state import Vote
 
 
@@ -540,10 +543,21 @@ class _ControlledStoreMixin:
 
 
 class MemoryStore(_ControlledStoreMixin):
-    """Thread-safe CAS store holding per-partition transaction-state logs."""
+    """Thread-safe CAS store holding per-partition transaction-state logs.
+
+    With a ``LifecycleConfig`` armed the store additionally keeps a
+    CRC32-framed durable image per record (torn tails are treated as
+    absent — the write was never acknowledged — and bit-rot is detected
+    and repaired from a sibling slot of the same txn holding the terminal
+    decision), a per-partition append order the GC low-watermark advances
+    over, and a truncation journal (``gc_log``) the history checker audits
+    (AC-GC).  ``lifecycle=None`` (the default) is bit-identical to the
+    pre-lifecycle store.
+    """
 
     def __init__(self,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
         self._lock = threading.Lock()
         # (partition, txn) -> (state, writer)
         self._state: Dict[Tuple[str, str], Tuple[Vote, str]] = {}
@@ -551,7 +565,103 @@ class MemoryStore(_ControlledStoreMixin):
         self._payloads: Dict[Tuple[str, str], bytes] = {}
         self.cas_attempts = 0
         self.cas_losses = 0
+        self.lifecycle = LifecycleConfig.coerce(lifecycle)
+        # Durable image: key -> mutable CRC32-framed record bytes (the
+        # chaos BitFlip/TornTail hooks mutate these; reads verify them).
+        self._frames: Dict[Tuple[str, str], bytearray] = {}
+        self._order: Dict[str, List[str]] = {}     # partition -> txns, append order
+        self._order_seen: set = set()
+        self.watermarks: Dict[str, int] = {}       # partition -> truncated prefix
+        self.gc_log: List[GcEntry] = []
+        self._gc_index: Dict[Tuple[str, str], GcEntry] = {}
+        self.gc_truncations = 0
+        self.torn_records = 0
+        self.corrupt_records = 0
+        self.scrub_repairs = 0
+        self.quarantines = 0
+        self._corrupt_streak = 0
         self._init_control(decisions)
+
+    # -- lifecycle-aware record access (lock held) -------------------------
+    def _put(self, key: Tuple[str, str], state: Vote, writer: str) -> None:
+        self._state[key] = (state, writer)
+        lc = self.lifecycle
+        if lc is not None:
+            if key not in self._order_seen:
+                self._order_seen.add(key)
+                self._order.setdefault(key[0], []).append(key[1])
+            if lc.checksums:
+                self._frames[key] = bytearray(
+                    encode_record(state.value, writer))
+
+    def _get(self, key: Tuple[str, str]):
+        """-> (state, writer) | (CorruptRecord, "") | None, verifying the
+        CRC frame when checksums are armed.  Torn frames (unacknowledged
+        writes) are dropped as absent; bit-rot is repaired from a sibling
+        slot of the same txn, or surfaced as a typed `CorruptRecord`."""
+        cur = self._state.get(key)
+        lc = self.lifecycle
+        if cur is None:
+            if lc is not None and lc.gc:
+                # Truncated slot: the journal entry is the tombstone — it
+                # carries the settled terminal decision, which is the only
+                # answer a post-truncation reader can soundly be given.
+                e = self._gc_index.get(key)
+                if e is not None and e.decision is not None:
+                    return (Vote(e.decision), "gc")
+            return None
+        if lc is None or not lc.checksums:
+            return cur
+        fr = self._frames.get(key)
+        if fr is None:
+            return cur
+        rec = decode_record(bytes(fr), key[0], key[1])
+        if isinstance(rec, CorruptRecord):
+            if rec.torn:
+                # Torn tail: the write died mid-flight and was never
+                # acknowledged — absent-or-corrupt, safe to treat absent.
+                self.torn_records += 1
+                self._state.pop(key, None)
+                self._frames.pop(key, None)
+                return None
+            self.corrupt_records += 1
+            self._corrupt_streak += 1
+            if self._corrupt_streak >= lc.quarantine_threshold:
+                self.quarantines += 1
+                self._corrupt_streak = 0
+            repaired = self._sibling_repair(key)
+            if repaired is not None:
+                return repaired
+            return (rec, "")     # typed CorruptRecord, never garbage bytes
+        val, w = rec
+        return (Vote(val), w)
+
+    def _sibling_repair(self, key: Tuple[str, str]):
+        """Bit-rot repair from intra-txn redundancy: another slot of the
+        same txn holding a verified terminal decision, or the truncation
+        journal's recorded decision.  Rewrites the frame in place."""
+        partition, txn = key
+        found: Optional[Vote] = None
+        for (p2, t2), cur in self._state.items():
+            if t2 != txn or (p2, t2) == key:
+                continue
+            fr = self._frames.get((p2, t2))
+            if fr is not None and isinstance(
+                    decode_record(bytes(fr)), CorruptRecord):
+                continue       # the sibling is rotted too
+            if isinstance(cur[0], Vote) and cur[0].is_decision():
+                found = cur[0]
+                break
+        if found is None:
+            for e in reversed(self.gc_log):
+                if e.txn == txn and e.decision is not None:
+                    found = Vote(e.decision)
+                    break
+        if found is None:
+            return None
+        self._put(key, found, "scrub")
+        self.scrub_repairs += 1
+        return (found, "scrub")
 
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "") -> Vote:
@@ -564,37 +674,169 @@ class MemoryStore(_ControlledStoreMixin):
         with self._lock:
             self.cas_attempts += 1
             key = (partition, txn)
-            if key in self._state:
-                self.cas_losses += 1
-                return self._state[key][0]
-            self._state[key] = (state, writer)
+            cur = self._get(key)
+            if cur is not None:
+                if not isinstance(cur[0], CorruptRecord):
+                    self.cas_losses += 1
+                return cur[0]
+            self._put(key, state, writer)
             return state
 
     def log(self, partition: str, txn: str, state: Vote,
             writer: str = "") -> Vote:
         with self._lock:
             # Blind append: last record wins, but a decision record never
-            # regresses to a vote (append-only log read returns the newest
-            # *decision* if present — matches 2PC recovery reads).
+            # regresses to a vote NOR flips to the other decision (a zombie
+            # re-issue from a dead incarnation racing crash recovery must
+            # not make the slot serve both terminal values — AC3).
             key = (partition, txn)
-            cur = self._state.get(key)
-            if cur is not None and cur[0].is_decision() and not state.is_decision():
+            cur = self._get(key)
+            if (cur is not None and isinstance(cur[0], Vote)
+                    and cur[0].is_decision() and state != cur[0]):
                 result = cur[0]
             else:
-                self._state[key] = (state, writer)
+                self._put(key, state, writer)
                 result = state
         self._note_control(partition, txn, result)
         return result
 
     def read_state(self, partition: str, txn: str) -> Optional[Vote]:
         with self._lock:
-            cur = self._state.get((partition, txn))
+            cur = self._get((partition, txn))
             return cur[0] if cur else None
 
     def writer_of(self, partition: str, txn: str) -> Optional[str]:
         with self._lock:
             cur = self._state.get((partition, txn))
             return cur[1] if cur else None
+
+    # -- durable-state lifecycle -------------------------------------------
+    def gc_pass(self, now: float = 0.0) -> int:
+        """Advance each partition's low-watermark past SETTLED txns (some
+        slot of the txn holds a terminal decision — durable here by
+        presence, this store being its own single volume) and truncate the
+        slots below it, journaling every removal.  The watermark only ever
+        moves forward (monotonic CAS under the store lock) and never past
+        the first unsettled txn, so an in-doubt transaction blocks GC of
+        its partition rather than losing recoverability."""
+        lc = self.lifecycle
+        if lc is None or not lc.gc:
+            return 0
+        with self._lock:
+            settled: Dict[str, Vote] = {}
+            for (_p, t), cur in self._state.items():
+                if isinstance(cur[0], Vote) and cur[0].is_decision():
+                    settled.setdefault(t, cur[0])
+            for e in self.gc_log:
+                if e.decision is not None:
+                    settled.setdefault(e.txn, Vote(e.decision))
+            n = 0
+            for partition, order in self._order.items():
+                wm = self.watermarks.get(partition, 0)
+                while wm < len(order):
+                    txn = order[wm]
+                    key = (partition, txn)
+                    cur = self._state.get(key)
+                    if cur is None:
+                        wm += 1           # torn-dropped or already truncated
+                        continue
+                    dec = settled.get(txn)
+                    if dec is None:
+                        break             # unsettled txn: watermark stops
+                    e = GcEntry(partition, txn,
+                                getattr(cur[0], "value", None), dec.value,
+                                True, at=now)
+                    self.gc_log.append(e)
+                    self._gc_index[key] = e
+                    self._state.pop(key, None)
+                    self._frames.pop(key, None)
+                    wm += 1
+                    n += 1
+                if wm > self.watermarks.get(partition, 0):
+                    self.watermarks[partition] = wm
+            self.gc_truncations += n
+            return n
+
+    def scrub_pass(self) -> int:
+        """Verify every retained frame (repairing rot, dropping torn
+        tails); returns the number of repairs made."""
+        lc = self.lifecycle
+        if lc is None or not lc.checksums:
+            return 0
+        with self._lock:
+            before = self.scrub_repairs
+            for key in list(self._state.keys()):
+                self._get(key)
+            return self.scrub_repairs - before
+
+    def bitflip(self, rng: random.Random) -> bool:
+        """Chaos hook: flip one body byte of a REPAIRABLE durable record.
+        Eligible slots belong to a txn with a second, intact terminal slot
+        (rot with no redundant copy is unrecoverable by any protocol — the
+        Nemesis models survivable media rot).  Header bytes are spared:
+        this format cannot distinguish header rot from a torn create."""
+        lc = self.lifecycle
+        if lc is None or not lc.checksums:
+            return False
+        with self._lock:
+            terminal: Dict[str, int] = {}
+            for (_p, t), cur in self._state.items():
+                if isinstance(cur[0], Vote) and cur[0].is_decision():
+                    terminal[t] = terminal.get(t, 0) + 1
+            cands = sorted(
+                key for key in self._frames
+                if key in self._state
+                and terminal.get(key[1], 0)
+                >= (2 if isinstance(self._state[key][0], Vote)
+                    and self._state[key][0].is_decision() else 1))
+            if not cands:
+                return False
+            key = cands[rng.randrange(len(cands))]
+            fr = self._frames[key]
+            body_start = bytes(fr).find(b"\n") + 1
+            if body_start <= 0 or body_start >= len(fr):
+                return False
+            i = rng.randrange(body_start, len(fr))
+            fr[i] ^= rng.randrange(1, 256)
+            return True
+
+    def tear_slot(self, key: Tuple[str, str]) -> bool:
+        """Chaos hook: truncate the slot's frame mid-write (a torn tail).
+        The next read detects the short body and treats the record as
+        absent — sound only because the Nemesis pairs this with losing the
+        write's response (the record was never acknowledged)."""
+        lc = self.lifecycle
+        if lc is None or not lc.checksums:
+            return False
+        with self._lock:
+            fr = self._frames.get(key)
+            if fr is None or len(fr) < 2:
+                return False
+            del fr[len(fr) - 2:]
+            return True
+
+    def partition_log(self, partition: str) -> List[Tuple[str, str]]:
+        """Retained (post-watermark) slots of ``partition`` in append
+        order — what a durable restart scan must replay.  With no
+        lifecycle armed there is no order metadata; fall back to the
+        state map, sorted for determinism."""
+        with self._lock:
+            order = self._order.get(partition)
+            if order is not None:
+                wm = self.watermarks.get(partition, 0)
+                return [(partition, t) for t in order[wm:]
+                        if (partition, t) in self._state]
+            return sorted(k for k in self._state if k[0] == partition)
+
+    def is_truncated(self, key: Tuple[str, str]) -> bool:
+        return key in self._gc_index
+
+    def watermark_lag(self) -> int:
+        """Slots retained above the watermark, summed over partitions —
+        how far truncation is behind the append frontier."""
+        with self._lock:
+            return sum(len(order) - self.watermarks.get(p, 0)
+                       for p, order in self._order.items())
 
     def log_data(self, partition: str, nbytes: int) -> None:
         with self._lock:
@@ -630,16 +872,52 @@ class FileStore(_ControlledStoreMixin):
     """
 
     def __init__(self, root: str,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
         self.root = root
         os.makedirs(os.path.join(root, "state"), exist_ok=True)
         os.makedirs(os.path.join(root, "data"), exist_ok=True)
+        self.lifecycle = LifecycleConfig.coerce(lifecycle)
+        self.torn_records = 0
+        self.corrupt_records = 0
+        self.scrub_repairs = 0
+        self.quarantines = 0
+        self.gc_truncations = 0
+        self._corrupt_streak = 0
+        self._torn_lock = threading.Lock()
+        self.watermarks: Dict[str, int] = {}
+        self.gc_log: List[GcEntry] = []
+        self._gc_index: Dict[Tuple[str, str], GcEntry] = {}
+        # A crash between the tmp write and os.replace strands a
+        # `.tmp.<pid>.<tid>` file; sweep them at open (they were never
+        # visible at the final path, so unlinking loses nothing).
+        self.orphans_swept = self._sweep_orphans()
         self._init_control(decisions)
+
+    def _sweep_orphans(self) -> int:
+        n = 0
+        for sub in ("state", "data"):
+            top = os.path.join(self.root, sub)
+            for dirpath, _dirs, files in os.walk(top):
+                for name in files:
+                    if ".tmp." in name:
+                        try:
+                            os.unlink(os.path.join(dirpath, name))
+                            n += 1
+                        except FileNotFoundError:
+                            pass
+        return n
 
     def _state_path(self, partition: str, txn: str) -> str:
         d = os.path.join(self.root, "state", partition)
         os.makedirs(d, exist_ok=True)
         return os.path.join(d, txn)
+
+    def _payload(self, state: Vote, writer: str) -> bytes:
+        lc = self.lifecycle
+        if lc is not None and lc.checksums:
+            return encode_record(state.value, writer)
+        return f"{state.value}\n{writer}\n".encode()
 
     def log_once(self, partition: str, txn: str, state: Vote,
                  writer: str = "") -> Vote:
@@ -648,13 +926,25 @@ class FileStore(_ControlledStoreMixin):
             partition, txn, state, writer)
 
     def _log_once_direct(self, partition: str, txn: str, state: Vote,
-                         writer: str = "") -> Vote:
+                         writer: str = ""):
         path = self._state_path(partition, txn)
-        payload = f"{state.value}\n{writer}\n".encode()
+        payload = self._payload(state, writer)
         try:
             fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
         except FileExistsError:
-            return self._read(path)
+            existing = self._read(path, partition, txn)
+            if existing is None:
+                # The file exists but holds a torn (never-acknowledged)
+                # create.  Complete the CAS in place under a local lock;
+                # cross-*process* races on a torn create are out of scope
+                # here (a production port would re-run O_EXCL after an
+                # unlink-if-unchanged).
+                with self._torn_lock:
+                    existing = self._read(path, partition, txn)
+                    if existing is None:
+                        self._replace(path, payload)
+                        return state
+            return existing
         try:
             os.write(fd, payload)
             os.fsync(fd)
@@ -662,28 +952,154 @@ class FileStore(_ControlledStoreMixin):
             os.close(fd)
         return state
 
-    def log(self, partition: str, txn: str, state: Vote,
-            writer: str = "") -> Vote:
-        path = self._state_path(partition, txn)
+    def _replace(self, path: str, payload: bytes) -> None:
         tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
         with open(tmp, "wb") as f:
-            f.write(f"{state.value}\n{writer}\n".encode())
+            f.write(payload)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic overwrite
+
+    def log(self, partition: str, txn: str, state: Vote,
+            writer: str = "") -> Vote:
+        path = self._state_path(partition, txn)
+        cur = self.read_state(partition, txn)
+        if isinstance(cur, Vote) and cur.is_decision() and state != cur:
+            # Decisions never regress to a vote nor flip to the other
+            # decision (AC3 at the disk).
+            return cur
+        self._replace(path, self._payload(state, writer))
         self._note_control(partition, txn, state)
         return state
 
-    def _read(self, path: str) -> Vote:
+    def _read(self, path: str, partition: str = "", txn: str = ""):
+        """-> Vote | CorruptRecord | None (torn/absent).  Never raises on
+        damaged bytes: a zero-length or truncated file left by a torn
+        create reads as None (the write was never acknowledged), and
+        bit-rot of a full-length record surfaces as a typed
+        `CorruptRecord` instead of a garbage Vote."""
         with open(path, "rb") as f:
-            return Vote(f.read().decode().splitlines()[0])
+            blob = f.read()
+        if blob.startswith(RECORD_MAGIC):
+            rec = decode_record(blob, partition, txn)
+            if isinstance(rec, CorruptRecord):
+                if rec.torn:
+                    self.torn_records += 1
+                    return None
+                self.corrupt_records += 1
+                self._corrupt_streak += 1
+                lc = self.lifecycle
+                if (lc is not None
+                        and self._corrupt_streak >= lc.quarantine_threshold):
+                    self.quarantines += 1
+                    self._corrupt_streak = 0
+                return rec
+            return Vote(rec[0])
+        lines = blob.decode(errors="replace").splitlines()
+        if not lines or not lines[0]:
+            self.torn_records += 1      # zero-length / truncated legacy file
+            return None
+        try:
+            return Vote(lines[0])
+        except ValueError:
+            self.corrupt_records += 1
+            return CorruptRecord(partition, txn, torn=False,
+                                 detail=f"unparsable state {lines[0]!r}")
 
     def read_state(self, partition: str, txn: str) -> Optional[Vote]:
         path = self._state_path(partition, txn)
         try:
-            return self._read(path)
+            result = self._read(path, partition, txn)
         except FileNotFoundError:
-            return None
+            result = None
+        if result is None and self._gc_index:
+            e = self._gc_index.get((partition, txn))
+            if e is not None and e.decision is not None:
+                return Vote(e.decision)   # truncation tombstone
+        return result
+
+    # -- durable-state lifecycle -------------------------------------------
+    def _state_files(self):
+        """Yield (partition, txn, path) for every retained state file."""
+        top = os.path.join(self.root, "state")
+        for part in sorted(os.listdir(top)):
+            pdir = os.path.join(top, part)
+            if not os.path.isdir(pdir):
+                continue
+            for name in sorted(os.listdir(pdir)):
+                if ".tmp." in name or name == ".watermark":
+                    continue
+                yield part, name, os.path.join(pdir, name)
+
+    def scrub(self) -> List[str]:
+        """Verify every state file; unlink torn tails (unacknowledged
+        writes) and return the paths of rotted records needing repair
+        from a replica of the volume."""
+        rotted: List[str] = []
+        for part, txn, path in self._state_files():
+            try:
+                result = self._read(path, part, txn)
+            except FileNotFoundError:
+                continue
+            if result is None:
+                try:
+                    os.unlink(path)
+                except FileNotFoundError:
+                    pass
+            elif isinstance(result, CorruptRecord):
+                rotted.append(path)
+        return rotted
+
+    def gc_pass(self, now: float = 0.0) -> int:
+        """Truncate state files of settled txns (some slot of the txn
+        holds a terminal decision on this volume), journaling each
+        removal.  Files carry no total append order, so truncation is
+        settled-only rather than strict-prefix; the per-partition
+        watermark counts truncated slots and is persisted beside them."""
+        lc = self.lifecycle
+        if lc is None or not lc.gc:
+            return 0
+        slots: Dict[Tuple[str, str], Tuple[str, Optional[Vote]]] = {}
+        for part, txn, path in self._state_files():
+            try:
+                result = self._read(path, part, txn)
+            except FileNotFoundError:
+                continue
+            slots[(part, txn)] = (
+                path, result if isinstance(result, Vote) else None)
+        settled: Dict[str, Vote] = {}
+        for (_p, t), (_path, vote) in slots.items():
+            if vote is not None and vote.is_decision():
+                settled.setdefault(t, vote)
+        for e in self.gc_log:
+            if e.decision is not None:
+                settled.setdefault(e.txn, Vote(e.decision))
+        n = 0
+        removed_by_part: Dict[str, int] = {}
+        for (part, txn), (path, vote) in sorted(slots.items()):
+            dec = settled.get(txn)
+            if dec is None:
+                continue
+            e = GcEntry(part, txn, None if vote is None else vote.value,
+                        dec.value, True, at=now)
+            self.gc_log.append(e)
+            self._gc_index[(part, txn)] = e
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+            removed_by_part[part] = removed_by_part.get(part, 0) + 1
+            n += 1
+        for part, removed in removed_by_part.items():
+            wm = self.watermarks.get(part, 0) + removed
+            self.watermarks[part] = wm
+            wpath = os.path.join(self.root, "state", part, ".watermark")
+            self._replace(wpath, f"{wm}\n".encode())
+        self.gc_truncations += n
+        return n
+
+    def watermark_lag(self) -> int:
+        return sum(1 for _ in self._state_files())
 
     # Bulk payloads (checkpoint shards) ------------------------------------
     def data_path(self, partition: str, name: str) -> str:
@@ -721,10 +1137,12 @@ class SimStorage(_DecisionCacheMixin):
 
     def __init__(self, sim, model: LatencyModel, seed: int = 0,
                  batch: Optional[BatchConfig] = None,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
         self.sim = sim
         self.model = model
-        self.store = MemoryStore()
+        self.store = MemoryStore(lifecycle=lifecycle)
+        self.lifecycle = self.store.lifecycle
         self.rng = random.Random(seed)
         self.requests = 0
         self.round_trips = 0
@@ -734,7 +1152,8 @@ class SimStorage(_DecisionCacheMixin):
         self._init_decisions(decisions, seed)
 
     # Each returns a sim Event yielding the op's result.
-    def _op(self, service_ms: float, apply_fn, lane: Optional[str] = None):
+    def _op(self, service_ms: float, apply_fn, lane: Optional[str] = None,
+            torn_key: Optional[Tuple[str, str]] = None):
         self.requests += 1
         self.round_trips += 1
         done = self.sim.event()
@@ -754,6 +1173,14 @@ class SimStorage(_DecisionCacheMixin):
                 return done
             if fate == "lose-response":
                 self.sim._schedule(self.sim.now + service_ms / 2.0, apply)
+                if torn_key is not None and self.chaos.torn_tail():
+                    # Torn tail: the write applied but died mid-persist —
+                    # the durable frame is truncated AFTER the apply and
+                    # the response is lost, so the record was never
+                    # acknowledged and treat-as-absent on re-read is sound.
+                    self.sim._schedule(
+                        self.sim.now + service_ms * 0.75,
+                        lambda: self.store.tear_slot(torn_key))
                 return done
             service_ms += extra
         self.sim._schedule(self.sim.now + service_ms / 2.0, apply)
@@ -857,10 +1284,15 @@ class SimStorage(_DecisionCacheMixin):
                          fwd=on_forward))
         else:
             ms = self.model.sample(self.rng, self.model.conditional_write_ms)
+            # Torn-tail faults target non-decision writes only: a decision
+            # that applied may already have fed the decision index, and a
+            # later tear would leave the cache serving an un-durable value.
             ev = self._op(ms, self._applied(
                 partition, txn,
                 lambda: self.store.log_once(partition, txn, state, writer)),
-                lane=partition)
+                lane=partition,
+                torn_key=((partition, txn)
+                          if not state.is_decision() else None))
             if on_forward is not None:
                 # Vote forwarding (Table 3 cornus-opt1 / paxos-commit): the
                 # service pushes the slot's decided value to ``forward_to``
@@ -916,6 +1348,56 @@ class SimStorage(_DecisionCacheMixin):
             self._observed(self._flush_single(op), lane=partition),
             "log_batch", partition, txn, state, writer)
 
+    # -- durable-state lifecycle (delegates to the backing MemoryStore) ----
+    def gc_pass(self, now: Optional[float] = None) -> int:
+        return self.store.gc_pass(self.sim.now if now is None else now)
+
+    def scrub_pass(self) -> int:
+        return self.store.scrub_pass()
+
+    def bitflip(self, rng: random.Random) -> bool:
+        return self.store.bitflip(rng)
+
+    def tear_slot(self, key: Tuple[str, str]) -> bool:
+        return self.store.tear_slot(key)
+
+    def partition_log(self, partition: str) -> List[Tuple[str, str]]:
+        return self.store.partition_log(partition)
+
+    def is_truncated(self, key: Tuple[str, str]) -> bool:
+        return self.store.is_truncated(key)
+
+    def watermark_lag(self) -> int:
+        return self.store.watermark_lag()
+
+    @property
+    def gc_log(self) -> List[GcEntry]:
+        return self.store.gc_log
+
+    @property
+    def watermarks(self) -> Dict[str, int]:
+        return self.store.watermarks
+
+    @property
+    def gc_truncations(self) -> int:
+        return self.store.gc_truncations
+
+    @property
+    def torn_records(self) -> int:
+        return self.store.torn_records
+
+    @property
+    def corrupt_records(self) -> int:
+        return self.store.corrupt_records
+
+    @property
+    def scrub_repairs(self) -> int:
+        return self.store.scrub_repairs
+
+    @property
+    def quarantines(self) -> int:
+        return self.store.quarantines
+
     # -- ground truth for the history checker ------------------------------
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
         return self.store.snapshot()
@@ -970,7 +1452,7 @@ class _Slot:
     """Per-(partition, txn) state on ONE replica."""
 
     __slots__ = ("promised", "acc_ballot", "acc_value", "decided",
-                 "value", "gen", "writer")
+                 "value", "gen", "writer", "corrupt")
 
     def __init__(self) -> None:
         self.promised: Ballot = OWNER_BALLOT   # implicit phase-1 for owner
@@ -980,6 +1462,11 @@ class _Slot:
         self.value: Optional[Vote] = None      # visible log record
         self.gen = 0                           # owner-assigned LSN of `value`
         self.writer = ""
+        # Bit-rot flag: the visible record failed its checksum.  Only the
+        # VISIBLE value is hidden from readers; acceptor metadata
+        # (promised/acc_value/decided) survives — corruption of the log
+        # record must not let a conflicting accept past the decided-guard.
+        self.corrupt = False
 
 
 class ReplicaLog:
@@ -1018,7 +1505,8 @@ class ReplicaLog:
             ok = ballot > max(s.promised, self.epoch_promised)
             if ok:
                 s.promised = ballot
-            return (ok, s.acc_ballot, s.acc_value, s.value, s.gen,
+            vis = None if s.corrupt else s.value
+            return (ok, s.acc_ballot, s.acc_value, vis, s.gen,
                     s.decided, max(s.promised, self.epoch_promised))
 
     def prepare_epoch(self, ballot: Ballot):
@@ -1075,23 +1563,29 @@ class ReplicaLog:
             # is known, any future adoption must carry the chosen value.
             if s.acc_value is not None and s.acc_value != value:
                 s.acc_value = value
+            if s.corrupt:
+                # Learning the chosen value rewrites the rotted record.
+                s.value, s.gen = value, max(s.gen, 1)
+                s.corrupt = False
 
     # -- visible log -------------------------------------------------------
     def write(self, key, value: Vote, gen: int, writer: str = "") -> Vote:
-        """Blind overwrite at generation ``gen``; decisions never regress."""
+        """Blind overwrite at generation ``gen``; decisions never regress
+        to a vote nor flip to the other decision (AC3 at the disk)."""
         with self._lock:
             s = self._slot(key)
-            if (s.value is not None and s.value.is_decision()
-                    and not value.is_decision()):
+            if (not s.corrupt and s.value is not None
+                    and s.value.is_decision() and value != s.value):
                 return s.value
-            if gen > s.gen:
-                s.value, s.gen, s.writer = value, gen, writer
+            if gen > s.gen or s.corrupt:
+                s.value, s.gen, s.writer = value, max(gen, s.gen), writer
+                s.corrupt = False
             return s.value if s.value is not None else value
 
     def read(self, key):
         with self._lock:
             s = self._slots.get(key)
-            if s is None:
+            if s is None or s.corrupt:
                 return (None, 0, False)
             return (s.value, s.gen, s.decided)
 
@@ -1102,8 +1596,45 @@ class ReplicaLog:
             s = self._slot(key)
             if decided:
                 s.decided = True
-            if gen > s.gen or (s.value is None and value is not None):
+            if (gen > s.gen or (s.value is None and value is not None)
+                    or (s.corrupt and value is not None)):
                 s.value, s.gen, s.writer = value, max(gen, 1), writer
+                s.corrupt = False
+
+    # -- durable-state lifecycle -------------------------------------------
+    def truncate(self, key) -> bool:
+        """GC: drop the slot entirely (its decision is journaled by the
+        enclosing store's watermark pass before this is called)."""
+        with self._lock:
+            return self._slots.pop(key, None) is not None
+
+    def corrupt_slot(self, key) -> bool:
+        """Chaos hook: rot the slot's visible record (checksum failure on
+        next read).  Acceptor metadata survives — see `_Slot.corrupt`."""
+        with self._lock:
+            s = self._slots.get(key)
+            if s is None or s.value is None:
+                return False
+            s.corrupt = True
+            return True
+
+    def corrupt_keys(self):
+        with self._lock:
+            return [k for k, s in self._slots.items() if s.corrupt]
+
+    def partition_digests(self) -> Dict[str, int]:
+        """Per-partition CRC32 over the replica's visible slot contents —
+        what the anti-entropy scrubber exchanges to find divergence
+        cheaply.  A corrupt record digests as empty, so rot always shows
+        up as a digest mismatch against an intact peer."""
+        with self._lock:
+            lines: Dict[str, List[str]] = {}
+            for (p, t), s in sorted(self._slots.items()):
+                v = "" if (s.corrupt or s.value is None) else s.value.value
+                lines.setdefault(p, []).append(
+                    f"{t}:{v}:{s.gen}:{int(s.decided)}:{int(s.corrupt)}")
+            return {p: zlib.crc32("\n".join(ls).encode())
+                    for p, ls in lines.items()}
 
     def log_data(self, partition: str, nbytes: int) -> None:
         with self._lock:
@@ -1253,7 +1784,8 @@ class ReplicatedStore(_ControlledStoreMixin):
     def __init__(self, n_replicas: int = 3, seed: int = 0,
                  max_rounds: int = 256,
                  decisions: Optional[DecisionCacheConfig] = None,
-                 membership: Optional[Sequence[int]] = None) -> None:
+                 membership: Optional[Sequence[int]] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
         assert n_replicas >= 1
         ids = (tuple(membership) if membership is not None
                else tuple(range(n_replicas)))
@@ -1283,6 +1815,17 @@ class ReplicatedStore(_ControlledStoreMixin):
         self.membership_history: List[MembershipConfig] = [self._membership]
         self.reconfigurations = 0
         self.state_transfers = 0
+        # Durable-state lifecycle (GC watermark + anti-entropy scrub).
+        self.lifecycle = LifecycleConfig.coerce(lifecycle)
+        self._order: Dict[str, List[str]] = {}
+        self._order_seen: set = set()
+        self.watermarks: Dict[str, int] = {}
+        self.gc_log: List[GcEntry] = []
+        self._gc_index: Dict[Tuple[str, str], GcEntry] = {}
+        self.gc_truncations = 0
+        self.scrub_repairs = 0
+        self.quarantines = 0
+        self.corrupt_records = 0
         self._init_control(decisions)
 
     @property
@@ -1312,8 +1855,23 @@ class ReplicatedStore(_ControlledStoreMixin):
         m = self._membership
         return [i for i in m.replica_ids if self._alive[i]]
 
+    def member_replicas(self) -> List[ReplicaLog]:
+        """Every member's replica log, down ones included (crash, not
+        amnesia — the disk survives an outage)."""
+        return [self.replicas[i] for i in self._membership.replica_ids]
+
     # -- quorum read -------------------------------------------------------
     def _read_merge(self, key):
+        if self._gc_index:
+            e = self._gc_index.get(key)
+            if e is not None and e.decision is not None:
+                # Truncated slot: the journal entry is the tombstone.  Any
+                # replica still holding the slot (e.g. it was down during
+                # the truncation pass) is lazily truncated here.
+                for r in self.member_replicas():
+                    r.truncate(key)
+                return (Vote(e.decision), 1, True,
+                        len(self.alive_replicas()))
         alive = self.alive_replicas()
         reads = [(r, r.read(key)) for r in alive]
         value, gen, decided = merge_reads([rd for _, rd in reads])
@@ -1410,10 +1968,18 @@ class ReplicatedStore(_ControlledStoreMixin):
         for d in donors:
             keys.update(d.keys())
         for k in keys:
+            if k in self._gc_index:
+                continue    # truncated: the journal entry is authoritative
             v, g, dec = merge_reads([d.read(k) for d in donors])
             if v is not None or dec:
                 target.repair(k, v, g, dec)
                 moved += 1
+        if self._gc_index:
+            # Anti-resurrection sweep: a rejoiner must not re-serve slots
+            # the watermark already truncated cluster-wide.
+            for k in target.keys():
+                if k in self._gc_index:
+                    target.truncate(k)
         pkeys = set()
         for d in donors:
             pkeys.update(d.data_keys())
@@ -1588,9 +2154,20 @@ class ReplicatedStore(_ControlledStoreMixin):
             partition, txn, state, writer)
         return result
 
+    def _track(self, key: Tuple[str, str]) -> None:
+        """Record first-write append order per partition — what the GC
+        low-watermark advances over."""
+        if self.lifecycle is None:
+            return
+        with self._glock:
+            if key not in self._order_seen:
+                self._order_seen.add(key)
+                self._order.setdefault(key[0], []).append(key[1])
+
     def _log_once_quorum(self, partition: str, txn: str, state: Vote,
                          writer: str = "") -> Vote:
         key = (partition, txn)
+        self._track(key)
         self.cas_attempts += 1
         value, _, decided, n_alive = self._read_merge(key)
         if n_alive < self.quorum:
@@ -1611,6 +2188,12 @@ class ReplicatedStore(_ControlledStoreMixin):
             and key not in self._pinned
         first = self._propose(key, state, owner=owner,
                               fast_ballot=fast_ballot)
+        # A concurrent gc_pass may have truncated the slot mid-propose
+        # (emptying the decided-guard our accept raced against): the
+        # journaled decision is authoritative, never the raced result.
+        e = self._gc_index.get(key) if self._gc_index else None
+        if e is not None and e.decision is not None:
+            first = Vote(e.decision)
         if first != state:
             self.cas_losses += 1
             return first
@@ -1681,10 +2264,13 @@ class ReplicatedStore(_ControlledStoreMixin):
     def log(self, partition: str, txn: str, state: Vote,
             writer: str = "") -> Vote:
         key = (partition, txn)
+        self._track(key)
         cur, gen, decided, n_alive = self._read_merge(key)
         if n_alive < self.quorum:
             raise QuorumUnavailable(f"{n_alive}/{self.n} replicas alive")
-        if cur is not None and cur.is_decision() and not state.is_decision():
+        if cur is not None and cur.is_decision() and state != cur:
+            # Decisions never regress to a vote nor flip to the other
+            # decision (AC3 at the disk).
             return cur
         with self._glock:
             g = self._gens[key] = max(self._gens.get(key, 0), gen) + 1
@@ -1692,6 +2278,10 @@ class ReplicatedStore(_ControlledStoreMixin):
                    for r in self.alive_replicas()]
         if len(results) < self.quorum:
             raise QuorumUnavailable("majority down during log")
+        e = self._gc_index.get(key) if self._gc_index else None
+        if e is not None and e.decision is not None:
+            # Raced a concurrent truncation: the journal is authoritative.
+            return Vote(e.decision)
         self._note_control(partition, txn, state)
         return state
 
@@ -1738,16 +2328,161 @@ class ReplicatedStore(_ControlledStoreMixin):
         (crash, not amnesia): a quorum-committed record must show up even
         while the replicas that hold it are offline.  Retired (removed)
         replicas are excluded — their stale writes can never be chosen."""
-        members = [self.replicas[i] for i in self._membership.replica_ids]
+        members = self.member_replicas()
         keys = set()
         for r in members:
             keys.update(r.keys())
         out = {}
         for k in keys:
+            if k in self._gc_index:
+                continue      # truncated slots live in the journal
             v, _, _ = merge_reads([r.read(k) for r in members])
             if v is not None:
                 out[k] = v
         return out
+
+    # -- durable-state lifecycle -------------------------------------------
+    def gc_pass(self, now: float = 0.0) -> int:
+        """Advance each partition's low-watermark past txns whose terminal
+        decision is durable on a QUORUM of members (down members count
+        their disks — crash, not amnesia) and truncate the slots below it,
+        journaling each removal.  Strict prefix order per partition: an
+        in-doubt txn blocks GC behind it."""
+        lc = self.lifecycle
+        if lc is None or not lc.gc:
+            return 0
+        with self._reconfig_lock:
+            members = self.member_replicas()
+            # Durability census: (key, vote) -> copies on member disks.  A
+            # terminal value on >= quorum disks IS quorum-durable whether
+            # it got there via Paxos learn (decided=True) or a generation
+            # write (``log``-path decisions never set the consensus flag).
+            counts: Dict[Tuple[Tuple[str, str], str], int] = {}
+            seen_keys = set()
+            for r in members:
+                seen_keys.update(r.keys())
+            for k in seen_keys:
+                if k in self._gc_index:
+                    # Resurrected garbage from an op that raced an earlier
+                    # truncation: re-truncate, keep it out of the census.
+                    for r in members:
+                        r.truncate(k)
+                    continue
+                for r in members:
+                    v, _g, _d = r.read(k)
+                    if v is not None and v.is_decision():
+                        ck = (k, v.value)
+                        counts[ck] = counts.get(ck, 0) + 1
+            settled: Dict[str, Vote] = {}
+            for e in self.gc_log:
+                if e.decision is not None:
+                    settled.setdefault(e.txn, Vote(e.decision))
+            for (k, val), n_copies in counts.items():
+                if n_copies >= self.quorum:
+                    settled.setdefault(k[1], Vote(val))
+            n = 0
+            with self._glock:
+                order_items = [(p, list(ts)) for p, ts in self._order.items()]
+            for partition, order in order_items:
+                wm = self.watermarks.get(partition, 0)
+                while wm < len(order):
+                    txn = order[wm]
+                    key = (partition, txn)
+                    if key in self._gc_index:
+                        wm += 1
+                        continue
+                    dec = settled.get(txn)
+                    if dec is None:
+                        break
+                    v, _g, _d = merge_reads([r.read(key) for r in members])
+                    e = GcEntry(partition, txn,
+                                None if v is None else v.value,
+                                dec.value, True, at=now)
+                    self.gc_log.append(e)
+                    self._gc_index[key] = e
+                    for r in members:
+                        r.truncate(key)
+                    wm += 1
+                    n += 1
+                if wm > self.watermarks.get(partition, 0):
+                    self.watermarks[partition] = wm
+            self.gc_truncations += n
+            return n
+
+    def scrub_pass(self) -> int:
+        """Anti-entropy: exchange per-partition slot digests among alive
+        members, repair divergent/corrupt replicas through `repair`, and
+        quarantine (full state transfer) any member whose corrupt-record
+        count crosses the threshold.  Returns repairs made."""
+        lc = self.lifecycle
+        if lc is None or not lc.scrub:
+            return 0
+        with self._reconfig_lock:
+            alive = [(i, self.replicas[i])
+                     for i in self._membership.replica_ids if self._alive[i]]
+            if len(alive) < 2:
+                return 0
+            digests = [r.partition_digests() for _i, r in alive]
+            suspect_parts = set()
+            all_parts = set()
+            for dg in digests:
+                all_parts.update(dg)
+            for p in all_parts:
+                vals = {dg.get(p) for dg in digests}
+                if len(vals) > 1:
+                    suspect_parts.add(p)
+            corrupt_by = {i: set(r.corrupt_keys()) for i, r in alive}
+            self.corrupt_records += sum(
+                len(ks) for ks in corrupt_by.values())
+            keys = set()
+            for _i, r in alive:
+                keys.update(k for k in r.keys() if k[0] in suspect_parts)
+            for ks in corrupt_by.values():
+                keys.update(ks)
+            repaired = 0
+            for k in sorted(keys):
+                if k in self._gc_index:
+                    for _i, r in alive:
+                        r.truncate(k)
+                    continue
+                reads = [(r, r.read(k)) for _i, r in alive]
+                v, g, d = merge_reads([rd for _r, rd in reads])
+                if v is None and not d:
+                    continue
+                for r, (rv, rg, rd) in reads:
+                    if rg < g or (d and not rd) or (v is not None
+                                                    and rv is None):
+                        r.repair(k, v, g, d)
+                        repaired += 1
+            self.scrub_repairs += repaired
+            threshold = lc.quarantine_threshold
+            for i, _r in alive:
+                if len(corrupt_by[i]) >= threshold:
+                    # Quarantine: refresh the whole volume from its peers.
+                    self.quarantines += 1
+                    self._state_transfer(i, self._membership.replica_ids)
+            return repaired
+
+    def partition_log(self, partition: str) -> List[Tuple[str, str]]:
+        with self._glock:
+            order = self._order.get(partition)
+            if order is not None:
+                wm = self.watermarks.get(partition, 0)
+                retained = order[wm:]
+                return [(partition, t) for t in retained
+                        if (partition, t) not in self._gc_index]
+        keys = set()
+        for r in self.member_replicas():
+            keys.update(k for k in r.keys() if k[0] == partition)
+        return sorted(keys)
+
+    def is_truncated(self, key: Tuple[str, str]) -> bool:
+        return key in self._gc_index
+
+    def watermark_lag(self) -> int:
+        with self._glock:
+            return sum(len(order) - self.watermarks.get(p, 0)
+                       for p, order in self._order.items())
 
 
 class DelayedMemoryStore(MemoryStore):
@@ -1761,8 +2496,9 @@ class DelayedMemoryStore(MemoryStore):
     count rather than of the host machine."""
 
     def __init__(self, delay_s: float,
-                 decisions: Optional[DecisionCacheConfig] = None) -> None:
-        super().__init__(decisions=decisions)
+                 decisions: Optional[DecisionCacheConfig] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
+        super().__init__(decisions=decisions, lifecycle=lifecycle)
         self._delay_s = delay_s
 
     def _log_once_direct(self, partition, txn, state, writer=""):
@@ -1780,10 +2516,11 @@ class DelayedReplicatedStore(ReplicatedStore):
     def __init__(self, delay_s: float, n_replicas: int = 3, seed: int = 0,
                  max_rounds: int = 256,
                  decisions: Optional[DecisionCacheConfig] = None,
-                 membership: Optional[Sequence[int]] = None) -> None:
+                 membership: Optional[Sequence[int]] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
         super().__init__(n_replicas=n_replicas, seed=seed,
                          max_rounds=max_rounds, decisions=decisions,
-                         membership=membership)
+                         membership=membership, lifecycle=lifecycle)
         self._delay_s = delay_s
 
     def _log_once_quorum(self, partition, txn, state, writer=""):
@@ -1886,7 +2623,8 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                  batch: Optional[BatchConfig] = None,
                  lease_ms: float = 200.0,
                  decisions: Optional[DecisionCacheConfig] = None,
-                 membership: Optional[Sequence[int]] = None) -> None:
+                 membership: Optional[Sequence[int]] = None,
+                 lifecycle: Optional[LifecycleConfig] = None) -> None:
         assert mode in ("leader", "coloc")
         self.sim = sim
         self.model = model
@@ -1962,6 +2700,18 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         self.state_transfers = 0
         self.lease_degradations = 0
         self._reconfiguring = None     # single-flight config-change event
+        # Durable-state lifecycle (GC watermark + anti-entropy scrub).
+        self.lifecycle = LifecycleConfig.coerce(lifecycle)
+        self._order: Dict[str, List[str]] = {}
+        self._order_seen: set = set()
+        self.watermarks: Dict[str, int] = {}
+        self.gc_log: List[GcEntry] = []
+        self._gc_index: Dict[Tuple[str, str], GcEntry] = {}
+        self.gc_truncations = 0
+        self.scrub_repairs = 0
+        self.quarantines = 0
+        self.corrupt_records = 0
+        self.torn_records = 0
         self._init_decisions(decisions, seed)
 
     # -- replica liveness (sim-time schedules, like Cluster nodes) ---------
@@ -2141,10 +2891,18 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         for d in donors:
             keys.update(d.keys())
         for k in keys:
+            if k in self._gc_index:
+                continue    # truncated: the journal entry is authoritative
             v, g, dec = merge_reads([d.read(k) for d in donors])
             if v is not None or dec:
                 target.repair(k, v, g, dec)
                 moved += 1
+        if self._gc_index:
+            # Anti-resurrection sweep: the rejoiner must not re-serve
+            # slots the watermark already truncated cluster-wide.
+            for k in target.keys():
+                if k in self._gc_index:
+                    target.truncate(k)
         pkeys = set()
         for d in donors:
             pkeys.update(d.data_keys())
@@ -2644,6 +3402,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                 yield self.sim.timeout(self.topology.rtt_ms(lr, src) / 2.0)
             else:
                 result = yield self._ingress.submit(op)
+            result = self._tombstoned((op.partition, op.txn), result)
             if (op.fwd is not None and not op.fwd.fired
                     and not op.fwd.scheduled):
                 # Raced / fallback paths: the caller's reply doubles as the
@@ -2874,8 +3633,17 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
         target in coloc mode (paxos-commit)."""
         self.requests += 1
         key = (partition, txn)
+        self._track(key)
         fwd = (None if on_forward is None
                else _Forward(self._region_of(forward_to), on_forward))
+        if self._gc_index and key in self._gc_index:
+            # Truncated slot: answer with the journaled decision (the
+            # tombstone) — a late terminator must never re-claim the slot.
+            ev = self._tombstone_answer(key, writer)
+            if fwd is not None:
+                ev.subscribe(lambda e: fwd.deliver_now(e.value))
+            return self._recorded(ev, "log_once", partition, txn, state,
+                                  writer)
         sfkey = (partition, txn, state.value)
         if self._dindex is not None:
             hit = self._dindex.lookup(txn)
@@ -2930,6 +3698,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
 
                 result = yield from self._via_leader(writer, inner,
                                                      forward=fwd)
+            result = self._tombstoned(key, result)
             if fwd is not None and not fwd.fired and not fwd.scheduled:
                 # Raced/short-circuited paths (value already decided before
                 # our accept round): the caller's reply doubles as the
@@ -2948,6 +3717,9 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                    mean_ms: float, n_records: int = 1):
         self.requests += 1
         key = (partition, txn)
+        self._track(key)
+        if self._gc_index and key in self._gc_index:
+            return self._tombstone_answer(key, writer)
         if self._batchable(partition, writer):
             return self._observed(self._submit_batched(
                 _BatchOp("log", partition, txn, state, writer,
@@ -2962,6 +3734,7 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
                 result = yield from self._via_leader(
                     writer, lambda li, lr: self._quorum_write(
                         lr, li, key, state, writer, mean_ms))
+            result = self._tombstoned(key, result)
             self._note(partition, txn, result)
             return result
 
@@ -2987,6 +3760,9 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
     def read_state(self, partition: str, txn: str, writer: str = ""):
         self.requests += 1
         key = (partition, txn)
+        if self._gc_index and key in self._gc_index:
+            return self._recorded(self._tombstone_answer(key, writer),
+                                  "read", partition, txn, None, writer)
 
         def gen():
             if self.mode == "coloc":
@@ -2995,11 +3771,197 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
             else:
                 result = yield from self._via_leader(
                     writer, lambda li, lr: self._quorum_read(lr, li, key))
+            result = self._tombstoned(key, result)
             self._note(partition, txn, result)
             return result
 
         return self._recorded(self.sim.process(gen()), "read", partition,
                               txn, None, writer)
+
+    # -- durable-state lifecycle -------------------------------------------
+    def _track(self, key: Tuple[str, str]) -> None:
+        if self.lifecycle is None:
+            return
+        if key not in self._order_seen:
+            self._order_seen.add(key)
+            self._order.setdefault(key[0], []).append(key[1])
+
+    def _tombstoned(self, key: Tuple[str, str], result):
+        """Post-completion tombstone check: an op that was IN FLIGHT when
+        ``gc_pass`` truncated its slot may have raced the truncation —
+        e.g. a late terminator's accept round landing on the freshly
+        emptied slot and "winning" a conflicting value.  The journaled
+        decision is authoritative; the raced result must never surface."""
+        e = self._gc_index.get(key) if self._gc_index else None
+        if e is not None and e.decision is not None:
+            return Vote(e.decision)
+        return result
+
+    def _tombstone_answer(self, key: Tuple[str, str], writer: str):
+        """One read-cost round trip answering from the truncation journal
+        (the GC watermark's tombstone for the slot)."""
+        e = self._gc_index[key]
+        value = Vote(e.decision)
+        src = self._region_of(writer)
+        if self.mode == "leader":
+            li = self._leader_idx()
+            dst = (self.replica_regions[li] if li is not None else src)
+        else:
+            dst = src
+        ms = (self.topology.rtt_ms(src, dst)
+              + self.model.sample(self.rng, self.model.read_ms))
+        done = self.sim.event()
+        self.sim._schedule(self.sim.now + ms, lambda: done.trigger(value))
+        return done
+
+    def gc_pass(self, now: float = 0.0) -> int:
+        """Advance each partition's low-watermark past txns whose terminal
+        decision is durable (decided) on a QUORUM of member disks and
+        truncate the slots below it, journaling each removal."""
+        lc = self.lifecycle
+        if lc is None or not lc.gc:
+            return 0
+        members = [self.replicas[i] for i in self.member_ids]
+        # (key, vote) -> copies on member disks; >= quorum copies of a
+        # terminal value is quorum durability whether the slot was decided
+        # by Paxos learn or a ``log``-path generation write.
+        counts: Dict[Tuple[Tuple[str, str], str], int] = {}
+        seen_keys = set()
+        for r in members:
+            seen_keys.update(r.keys())
+        for k in seen_keys:
+            if k in self._gc_index:
+                # Resurrected garbage (an op that raced an earlier
+                # truncation landed on the emptied slot): re-truncate and
+                # keep it out of the census — the journal is authoritative.
+                for r in members:
+                    r.truncate(k)
+                continue
+            for r in members:
+                v, _g, _d = r.read(k)
+                if v is not None and v.is_decision():
+                    ck = (k, v.value)
+                    counts[ck] = counts.get(ck, 0) + 1
+        settled: Dict[str, Vote] = {}
+        for e in self.gc_log:
+            if e.decision is not None:
+                settled.setdefault(e.txn, Vote(e.decision))
+        for (k, val), n_copies in counts.items():
+            if n_copies >= self.quorum:
+                settled.setdefault(k[1], Vote(val))
+        n = 0
+        for partition, order in self._order.items():
+            wm = self.watermarks.get(partition, 0)
+            while wm < len(order):
+                txn = order[wm]
+                key = (partition, txn)
+                if key in self._gc_index:
+                    wm += 1
+                    continue
+                dec = settled.get(txn)
+                if dec is None:
+                    break
+                v, _g, _d = merge_reads([r.read(key) for r in members])
+                e = GcEntry(partition, txn, None if v is None else v.value,
+                            dec.value, True, at=self.sim.now)
+                self.gc_log.append(e)
+                self._gc_index[key] = e
+                for r in members:
+                    r.truncate(key)
+                wm += 1
+                n += 1
+            if wm > self.watermarks.get(partition, 0):
+                self.watermarks[partition] = wm
+        self.gc_truncations += n
+        return n
+
+    def scrub_pass(self) -> int:
+        """Anti-entropy: per-partition digest exchange among alive members,
+        repair of divergent/corrupt replicas, quarantine + state transfer
+        for members past the corrupt threshold.  Instant-apply (the sim's
+        background maintenance plane does not contend with foreground
+        quorum traffic for service time)."""
+        lc = self.lifecycle
+        if lc is None or not lc.scrub:
+            return 0
+        alive = [(i, self.replicas[i]) for i in self.member_ids
+                 if self.replica_alive(i)]
+        if len(alive) < 2:
+            return 0
+        digests = [r.partition_digests() for _i, r in alive]
+        all_parts = set()
+        for dg in digests:
+            all_parts.update(dg)
+        suspect_parts = {p for p in all_parts
+                         if len({dg.get(p) for dg in digests}) > 1}
+        corrupt_by = {i: set(r.corrupt_keys()) for i, r in alive}
+        self.corrupt_records += sum(len(ks) for ks in corrupt_by.values())
+        keys = set()
+        for _i, r in alive:
+            keys.update(k for k in r.keys() if k[0] in suspect_parts)
+        for ks in corrupt_by.values():
+            keys.update(ks)
+        repaired = 0
+        for k in sorted(keys):
+            if k in self._gc_index:
+                for _i, r in alive:
+                    r.truncate(k)
+                continue
+            reads = [(r, r.read(k)) for _i, r in alive]
+            v, g, d = merge_reads([rd for _r, rd in reads])
+            if v is None and not d:
+                continue
+            for r, (rv, rg, rd) in reads:
+                if rg < g or (d and not rd) or (v is not None
+                                                and rv is None):
+                    r.repair(k, v, g, d)
+                    repaired += 1
+        self.scrub_repairs += repaired
+        for i, _r in alive:
+            if len(corrupt_by[i]) >= lc.quarantine_threshold:
+                self.quarantines += 1
+                self._sim_copy_image(self.member_ids, i)
+        return repaired
+
+    def bitflip(self, rng: random.Random) -> bool:
+        """Chaos hook: rot one decided, repairable slot record on one
+        member replica (another member must hold an intact decided copy,
+        so the scrubber — or lazy read repair — can fix it)."""
+        if self.lifecycle is None:
+            return False
+        members = [self.replicas[i] for i in self.member_ids]
+        holders: Dict[Tuple[str, str], List[ReplicaLog]] = {}
+        for r in members:
+            for k in r.keys():
+                v, _g, d = r.read(k)
+                if v is not None and d:
+                    holders.setdefault(k, []).append(r)
+        cands = sorted(k for k, rs in holders.items() if len(rs) >= 2)
+        if not cands:
+            return False
+        key = cands[rng.randrange(len(cands))]
+        rs = holders[key]
+        victim = rs[rng.randrange(len(rs))]
+        return victim.corrupt_slot(key)
+
+    def partition_log(self, partition: str) -> List[Tuple[str, str]]:
+        order = self._order.get(partition)
+        if order is not None:
+            wm = self.watermarks.get(partition, 0)
+            return [(partition, t) for t in order[wm:]
+                    if (partition, t) not in self._gc_index]
+        keys = set()
+        for i in self.member_ids:
+            keys.update(k for k in self.replicas[i].keys()
+                        if k[0] == partition)
+        return sorted(keys)
+
+    def is_truncated(self, key: Tuple[str, str]) -> bool:
+        return key in self._gc_index
+
+    def watermark_lag(self) -> int:
+        return sum(len(order) - self.watermarks.get(p, 0)
+                   for p, order in self._order.items())
 
     def snapshot(self) -> Dict[Tuple[str, str], Vote]:
         """Merged view over every MEMBER replica's disk (ground truth for
@@ -3010,6 +3972,8 @@ class ReplicatedSimStorage(_DecisionCacheMixin):
             keys.update(r.keys())
         out = {}
         for k in keys:
+            if k in self._gc_index:
+                continue      # truncated slots live in the journal
             v, _, _ = merge_reads([r.read(k) for r in members])
             if v is not None:
                 out[k] = v

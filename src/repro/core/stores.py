@@ -28,6 +28,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 from .control import DecisionCacheConfig
+from .lifecycle import LifecycleConfig
 from .storage import (AZURE_REDIS, BatchConfig, BatchingStore,
                       DelayedMemoryStore, DelayedReplicatedStore, FileStore,
                       LatencyModel, MemoryStore, RegionTopology,
@@ -76,6 +77,10 @@ class StoreConfig:
     chaos_drop_p: float = 0.0
     chaos_delay_ms: float = 0.0
     chaos_jitter_ms: float = 0.0
+    # Durable-state lifecycle (checksummed records, GC watermark, scrub).
+    # None (the default) keeps every backend bit-identical; accepts a
+    # LifecycleConfig or a plain dict (repro-bundle JSON).
+    lifecycle: Optional[object] = None
 
 
 _REGISTRY: Dict[str, Callable] = {}
@@ -140,38 +145,44 @@ def build_store(cfg: StoreConfig, sim=None):
 # --------------------------------------------------------------------------
 @register_store("memory")
 def _build_memory(cfg: StoreConfig, sim=None):
+    lc = LifecycleConfig.coerce(cfg.lifecycle)
     if cfg.service_delay_ms > 0:
         return DelayedMemoryStore(cfg.service_delay_ms / 1e3,
-                                  decisions=cfg.decisions)
-    return MemoryStore(decisions=cfg.decisions)
+                                  decisions=cfg.decisions, lifecycle=lc)
+    return MemoryStore(decisions=cfg.decisions, lifecycle=lc)
 
 
 @register_store("file")
 def _build_file(cfg: StoreConfig, sim=None):
     if cfg.root is None:
         raise ValueError("file backend needs StoreConfig.root")
-    return FileStore(cfg.root, decisions=cfg.decisions)
+    return FileStore(cfg.root, decisions=cfg.decisions,
+                     lifecycle=LifecycleConfig.coerce(cfg.lifecycle))
 
 
 @register_store("replicated")
 def _build_replicated(cfg: StoreConfig, sim=None):
+    lc = LifecycleConfig.coerce(cfg.lifecycle)
     if cfg.service_delay_ms > 0:
         return DelayedReplicatedStore(cfg.service_delay_ms / 1e3,
                                       n_replicas=cfg.replication,
                                       seed=cfg.seed,
                                       max_rounds=cfg.max_rounds,
                                       decisions=cfg.decisions,
-                                      membership=cfg.membership)
+                                      membership=cfg.membership,
+                                      lifecycle=lc)
     return ReplicatedStore(n_replicas=cfg.replication, seed=cfg.seed,
                            max_rounds=cfg.max_rounds,
                            decisions=cfg.decisions,
-                           membership=cfg.membership)
+                           membership=cfg.membership,
+                           lifecycle=lc)
 
 
 @register_store("sim")
 def _build_sim(cfg: StoreConfig, sim=None):
     return SimStorage(sim, cfg.model or AZURE_REDIS, seed=cfg.seed,
-                      batch=cfg.batch, decisions=cfg.decisions)
+                      batch=cfg.batch, decisions=cfg.decisions,
+                      lifecycle=LifecycleConfig.coerce(cfg.lifecycle))
 
 
 @register_store("replicated-sim")
@@ -183,4 +194,5 @@ def _build_replicated_sim(cfg: StoreConfig, sim=None):
         placement=cfg.placement, mode=cfg.mode,
         op_timeout_ms=cfg.op_timeout_ms, batch=cfg.batch,
         lease_ms=cfg.lease_ms, decisions=cfg.decisions,
-        membership=cfg.membership)
+        membership=cfg.membership,
+        lifecycle=LifecycleConfig.coerce(cfg.lifecycle))

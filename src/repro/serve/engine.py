@@ -325,6 +325,13 @@ class ServeEngine:
             elapsed, run_start, protocol=cfg.session.protocol,
             arrival=cfg.arrival, batch_mode=cfg.batch_mode,
             mean_batch=self.batcher.mean_batch)
+        # Durability lifecycle counters (zero on stores built without a
+        # LifecycleConfig — getattr keeps legacy stores working).
+        report.scrub_repairs = getattr(self.store, "scrub_repairs", 0)
+        report.quarantines = getattr(self.store, "quarantines", 0)
+        report.gc_truncations = getattr(self.store, "gc_truncations", 0)
+        wl = getattr(self.store, "watermark_lag", None)
+        report.watermark_lag = wl() if callable(wl) else 0
         counters = {
             "submitted": self.batcher.submitted,
             "batches": self.batcher.batches,

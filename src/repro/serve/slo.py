@@ -64,6 +64,13 @@ class SloReport:
     # Throughput inside the marked event window / outside it (None when no
     # window was marked).
     publish_disruption: Optional[float] = None
+    # Durability lifecycle (all zero unless the store was built with a
+    # LifecycleConfig): anti-entropy repairs, volumes quarantined, slots
+    # truncated by the GC watermark, and slots still behind it at run end.
+    scrub_repairs: int = 0
+    quarantines: int = 0
+    gc_truncations: int = 0
+    watermark_lag: int = 0
 
     def to_dict(self) -> dict:
         return {k: v for k, v in self.__dict__.items()}

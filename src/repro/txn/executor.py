@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Tuple
 from ..core.chaos import FaultSchedule, GuardedStorage, Nemesis
 from ..core.control import AdaptiveTimeouts, DecisionCacheConfig
 from ..core.history import HistoryRecorder, check_history
+from ..core.lifecycle import LifecycleConfig
 from ..core.protocol import Cluster, ProtocolConfig
 from ..core.protocols import get_protocol
 from ..core.sim import Sim
@@ -152,6 +153,12 @@ class BenchConfig:
     # Extra (node, crash_at_ms, restart_at_ms) crash–restarts armed on the
     # cluster directly (the schedule's own crashes ride cfg.chaos).
     crash_restarts: tuple = ()
+    # --- durable-state lifecycle (default-off) -----------------------------
+    # A core.lifecycle.LifecycleConfig (or its dict form) arming CRC32
+    # record framing, watermark GC and the anti-entropy scrubber on the
+    # store.  None — the default — builds the store exactly as before:
+    # every existing baseline stays bit-identical.
+    lifecycle: Optional[object] = None
 
 
 @dataclass
@@ -221,6 +228,19 @@ class BenchResult:
     recoveries_run: int = 0
     violations: int = -1
     violation_details: List[str] = field(default_factory=list)
+    # Durable-state lifecycle accounting (all zero with lifecycle=None):
+    # slots truncated by the GC watermark, un-truncated slots still behind
+    # it at run end, scrub repairs performed, volumes quarantined, and the
+    # checksum layer's corrupt / torn record detections.  recovery_spans
+    # holds (node, t_restart, t_done, slots_scanned) per durable restart —
+    # the recovery-time bound benchmarks/recovery_gc.py gates.
+    gc_truncations: int = 0
+    watermark_lag: int = 0
+    scrub_repairs: int = 0
+    quarantines: int = 0
+    corrupt_records: int = 0
+    torn_records: int = 0
+    recovery_spans: List[tuple] = field(default_factory=list)
 
     @staticmethod
     def _avg(xs: List[float]) -> float:
@@ -268,7 +288,13 @@ class BenchResult:
                 "breaker_half_opens": self.breaker_half_opens,
                 "crash_restarts": self.crash_restarts,
                 "recoveries_run": self.recoveries_run,
-                "violations": self.violations}
+                "violations": self.violations,
+                "gc_truncations": self.gc_truncations,
+                "watermark_lag": self.watermark_lag,
+                "scrub_repairs": self.scrub_repairs,
+                "quarantines": self.quarantines,
+                "corrupt_records": self.corrupt_records,
+                "torn_records": self.torn_records}
 
 
 def run_bench(workload_factory, model: LatencyModel,
@@ -294,11 +320,13 @@ def run_bench(workload_factory, model: LatencyModel,
                             if cfg.replication > 1 or cfg.topology is not None
                             else "sim")
     mode = (cfg.storage_mode or proto_cls.preferred_storage_mode or "leader")
+    lifecycle = LifecycleConfig.coerce(cfg.lifecycle)
     storage = build_store(StoreConfig(
         backend=backend, model=model, seed=cfg.seed, batch=batch,
         decisions=decisions, replication=cfg.replication,
         topology=cfg.topology, replica_regions=cfg.replica_regions,
-        placement=placement, mode=mode, lease_ms=cfg.lease_ms), sim=sim)
+        placement=placement, mode=mode, lease_ms=cfg.lease_ms,
+        lifecycle=lifecycle), sim=sim)
     if hasattr(storage, "fail_replica"):   # single-store backends: no-op
         for outage in cfg.replica_failures:
             storage.fail_replica(*outage)
@@ -365,6 +393,27 @@ def run_bench(workload_factory, model: LatencyModel,
         cluster.schedule_crash_restart(node, crash_at, restart_at)
     crashes_armed = bool(cfg.crash_restarts) or (
         cfg.chaos is not None and bool(cfg.chaos.crashes))
+    # Background lifecycle passes: fixed deterministic cadences (no rng
+    # draws), re-armed recursively until just past the issue horizon so
+    # late decisions still settle and truncate.
+    if lifecycle is not None:
+        lifecycle_end = cfg.horizon_ms + 400.0
+        if lifecycle.scrub and lifecycle.scrub_interval_ms > 0 \
+                and hasattr(raw_storage, "scrub_pass"):
+            def _scrub_tick():
+                raw_storage.scrub_pass()
+                nxt = sim.now + lifecycle.scrub_interval_ms
+                if nxt < lifecycle_end:
+                    sim._schedule(nxt, _scrub_tick)
+            sim._schedule(lifecycle.scrub_interval_ms, _scrub_tick)
+        if lifecycle.gc and lifecycle.gc_interval_ms > 0 \
+                and hasattr(raw_storage, "gc_pass"):
+            def _gc_tick():
+                raw_storage.gc_pass(sim.now)
+                nxt = sim.now + lifecycle.gc_interval_ms
+                if nxt < lifecycle_end:
+                    sim._schedule(nxt, _gc_tick)
+            sim._schedule(lifecycle.gc_interval_ms, _gc_tick)
     locks = {n: LockTable(n) for n in nodes}
 
     def release(node: str, txn: str, *_):
@@ -500,10 +549,26 @@ def run_bench(workload_factory, model: LatencyModel,
         res.breaker_half_opens = storage.breaker.half_opens
     res.crash_restarts = cluster.crash_restarts
     res.recoveries_run = cluster.recoveries_run
+    if lifecycle is not None:
+        # Final passes so the snapshot/checker sees repaired, settled
+        # state: scrub first (repairs corrupt replicas), then one last GC.
+        if lifecycle.scrub and hasattr(raw_storage, "scrub_pass"):
+            raw_storage.scrub_pass()
+        if lifecycle.gc and hasattr(raw_storage, "gc_pass"):
+            raw_storage.gc_pass(sim.now)
+        res.gc_truncations = getattr(raw_storage, "gc_truncations", 0)
+        wl = getattr(raw_storage, "watermark_lag", None)
+        res.watermark_lag = wl() if callable(wl) else 0
+        res.scrub_repairs = getattr(raw_storage, "scrub_repairs", 0)
+        res.quarantines = getattr(raw_storage, "quarantines", 0)
+        res.corrupt_records = getattr(raw_storage, "corrupt_records", 0)
+        res.torn_records = getattr(raw_storage, "torn_records", 0)
+    res.recovery_spans = list(cluster.recovery_spans)
     if cfg.record_history:
         found = check_history(history, cluster.ctx,
                               snapshot=raw_storage.snapshot(),
-                              participant_logs=proto_cls.participant_logs)
+                              participant_logs=proto_cls.participant_logs,
+                              gc_log=getattr(raw_storage, "gc_log", None))
         res.violations = len(found)
         res.violation_details = [str(v) for v in found[:20]]
     return res

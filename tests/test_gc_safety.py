@@ -1,0 +1,272 @@
+"""Safety of the durable-state lifecycle: invisibility, AC-GC, anti-resurrection.
+
+Three property families from the lifecycle design:
+
+  1. Bit-invisibility — arming the lifecycle layer (checksums, and in
+     fault-free runs even GC + scrub) changes NOTHING observable about a
+     healthy benchmark run: same commits, same aborts, same latency, same
+     certified history.
+  2. AC-GC under chaos — random fault schedules that mix bit-rot, torn
+     tails and GC-pulse truncation with crashes and network loss still
+     certify AC1–AC3 + writer-of + recoverability + AC-GC with zero
+     violations (regression seeds from development are pinned).
+  3. Anti-resurrection — once the watermark truncates a slot cluster-wide,
+     no scrub repair, state transfer, or late LogOnce can bring a
+     conflicting value back: the GC journal's decision is the tombstone.
+
+The @given properties run when hypothesis is installed; the seeded plain
+tests below each family carry the same coverage example-based so the suite
+is meaningful either way (see conftest.hypothesis_or_stubs).
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from conftest import hypothesis_or_stubs
+
+from repro.core import AZURE_REDIS, Vote
+from repro.core.lifecycle import LifecycleConfig
+from repro.core.protocols import registered_protocols
+from repro.core.storage import MemoryStore, ReplicatedStore
+from repro.txn import BenchConfig, YCSBWorkload, run_bench
+
+from benchmarks.chaos import run_one as chaos_run_one
+
+HAS_HYPOTHESIS, given, settings, st = hypothesis_or_stubs()
+
+ARMED = dict(checksums=True, gc=True, scrub=True,
+             gc_interval_ms=25.0, scrub_interval_ms=40.0)
+# The lifecycle's own observability surface: these move when it is armed
+# (watermark_lag counts retained slots); everything else must not.
+LIFECYCLE_KEYS = frozenset({"gc_truncations", "watermark_lag",
+                            "scrub_repairs", "quarantines",
+                            "corrupt_records", "torn_records"})
+
+
+def _foreground(res) -> dict:
+    return {k: v for k, v in res.breakdown().items()
+            if k not in LIFECYCLE_KEYS}
+
+
+def _bench(proto: str, lifecycle, seed: int = 5, horizon_ms: float = 200.0,
+           replication: int = 1):
+    def wl(nodes, seed):
+        return YCSBWorkload(nodes, seed=seed)
+    cfg = BenchConfig(protocol=proto, n_nodes=4, threads_per_node=2,
+                      horizon_ms=horizon_ms, seed=seed,
+                      replication=replication, record_history=True,
+                      lifecycle=lifecycle)
+    return run_bench(wl, AZURE_REDIS, cfg)
+
+
+# ---------------------------------------------------------------------------
+# 1. Bit-invisibility
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("proto", registered_protocols())
+def test_checksums_only_is_bit_invisible(proto):
+    """lifecycle=None vs checksums-only framing: identical breakdown."""
+    off = _bench(proto, None)
+    framed = _bench(proto, dict(checksums=True))
+    assert _foreground(framed) == _foreground(off)
+    assert framed.corrupt_records == 0 and framed.torn_records == 0
+
+
+@pytest.mark.parametrize("proto", ["cornus", "2pc", "cl"])
+@pytest.mark.parametrize("replication", [1, 3])
+def test_armed_lifecycle_invisible_on_healthy_runs(proto, replication):
+    """Full GC + scrub on a fault-free run: the foreground outcome is
+    untouched; only the maintenance counters move.  At R=1 the armed run
+    is result-identical; at R=3 the background cadence perturbs event-tie
+    ordering in the scheduler, so the bound is a tight tolerance instead
+    of exact equality (the bit-exactness contract is lifecycle=OFF, which
+    the bench gates pin)."""
+    off = _bench(proto, None, replication=replication)
+    on = _bench(proto, dict(ARMED), replication=replication)
+    if replication == 1:
+        assert on.commits == off.commits
+        assert on.aborts == off.aborts
+        assert on.throughput_tps == off.throughput_tps
+        assert on.avg_latency_ms == off.avg_latency_ms
+        assert on.scrub_repairs == 0   # single volume: nothing diverges
+    else:
+        assert abs(on.commits - off.commits) <= max(3, off.commits * 0.05)
+    assert on.gaveups == off.gaveups == 0
+    assert on.violations == 0 and off.violations == 0
+    # Scrub may catch up stale minority copies at R>1 (quorum writes skip
+    # a replica legitimately) — but never quarantines a healthy volume.
+    assert on.quarantines == 0
+    assert on.gc_truncations > 0       # GC ran and settled txns
+    assert on.corrupt_records == 0 and on.torn_records == 0
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.sampled_from(registered_protocols()))
+    @settings(max_examples=10, deadline=None)
+    def test_prop_checksums_invisible(seed, proto):
+        off = _bench(proto, None, seed=seed, horizon_ms=120.0)
+        framed = _bench(proto, dict(checksums=True), seed=seed,
+                        horizon_ms=120.0)
+        assert _foreground(framed) == _foreground(off)
+
+
+# ---------------------------------------------------------------------------
+# 2. AC-GC under random chaos + truncation (the "rot" fault mix)
+# ---------------------------------------------------------------------------
+# Regression cells from development: seeds that exposed the truncation/
+# recovery race (cornus R3) and the zombie decision re-issue (2pc R1),
+# plus generic coverage of both protocols at both replication levels.
+ROT_CELLS = [
+    ("cornus", 3, 0), ("cornus", 3, 3), ("cornus", 3, 5),
+    ("2pc", 1, 8),
+    ("cornus", 1, 2), ("2pc", 3, 1),
+]
+
+
+@pytest.mark.parametrize("proto,replication,seed", ROT_CELLS)
+def test_rot_mix_certifies_zero_violations(proto, replication, seed):
+    res, _sched, _config = chaos_run_one(proto, "rot", replication, seed,
+                                         horizon_ms=300.0)
+    assert res.violations == 0, res.violation_details
+    assert res.commits > 0                   # chaos may slow, not stop
+    assert res.gc_truncations > 0            # truncation pulses did fire
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("proto", ["cornus", "2pc"])
+@pytest.mark.parametrize("replication", [1, 3])
+def test_rot_mix_sweep_slow(proto, replication, seed):
+    res, _sched, _config = chaos_run_one(proto, "rot", replication, seed,
+                                         horizon_ms=300.0)
+    assert res.violations == 0, res.violation_details
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(min_value=0, max_value=100_000),
+           st.sampled_from(["cornus", "2pc"]),
+           st.sampled_from([1, 3]))
+    @settings(max_examples=8, deadline=None)
+    def test_prop_rot_mix_certifies(seed, proto, replication):
+        res, _s, _c = chaos_run_one(proto, "rot", replication, seed,
+                                    horizon_ms=200.0)
+        assert res.violations == 0, res.violation_details
+
+
+# ---------------------------------------------------------------------------
+# 3. Anti-resurrection
+# ---------------------------------------------------------------------------
+def _settled_store(lifecycle=None) -> ReplicatedStore:
+    """R=3 threaded store with a few settled txns per partition."""
+    lc = lifecycle or LifecycleConfig(**ARMED)
+    store = ReplicatedStore(3, seed=1, lifecycle=lc)
+    for p in ("p0", "p1"):
+        for t in range(4):
+            store.log_once(p, f"t{t}", Vote.VOTE_YES, writer=p)
+            store.log(p, f"t{t}", Vote.COMMIT if t % 2 else Vote.ABORT,
+                      writer=p)
+    return store
+
+
+def test_state_transfer_never_resurrects_truncated_slots():
+    store = _settled_store()
+    assert store.gc_pass() == 8
+    truncated = list(store._gc_index)
+    assert truncated
+    # Plant zombie copies on replica 2 — a rejoiner whose disk still holds
+    # (or re-acquired) pre-truncation slots, with the WRONG decision.
+    for k in truncated:
+        store.replicas[2].repair(k, Vote.COMMIT, 99, True)
+    store._state_transfer(2, store._membership.replica_ids)
+    for k in truncated:
+        assert k not in store.replicas[2].keys()
+        # The journal, not the zombie, answers late ops.
+        want = Vote(store._gc_index[k].decision)
+        assert store.read_state(*k) == want
+        assert store.log_once(*k, Vote.COMMIT, writer="n9") == want
+
+
+def test_scrub_truncates_resurrected_copies_and_repairs_rot():
+    store = _settled_store()
+    store.gc_pass()
+    zombie = next(iter(store._gc_index))
+    store.replicas[0].repair(zombie, Vote.COMMIT, 99, True)
+    # Rot one RETAINED slot on replica 1 so the scrubber has real work.
+    store.log_once("p2", "live", Vote.VOTE_YES, writer="p2")
+    live = ("p2", "live")
+    assert store.replicas[1].corrupt_slot(live)
+    store.scrub_pass()
+    assert zombie not in store.replicas[0].keys()
+    assert store.replicas[1].corrupt_keys() == []
+    assert store.scrub_repairs >= 1
+    assert store.read_state("p2", "live") == Vote.VOTE_YES
+
+
+def test_quarantine_refreshes_volume_from_peers():
+    store = _settled_store(LifecycleConfig(checksums=True, scrub=True,
+                                           quarantine_threshold=3))
+    keys = [("p0", f"t{t}") for t in range(3)]
+    for k in keys:
+        assert store.replicas[2].corrupt_slot(k)
+    store.scrub_pass()
+    assert store.quarantines == 1
+    assert store.replicas[2].corrupt_keys() == []
+    for p, t in keys:
+        assert store.read_state(p, t) is not None
+
+
+def test_memorystore_gc_interleaving_invariants():
+    """Random op/GC interleavings on the single-volume store: a decided
+    slot always answers its decision (before and after truncation), and
+    truncation never lets a slot be re-claimed or flipped."""
+    for seed in range(10):
+        rng = random.Random(seed)
+        ms = MemoryStore(lifecycle=LifecycleConfig(checksums=True, gc=True))
+        decided = {}
+        for step in range(120):
+            p = f"p{rng.randrange(3)}"
+            t = f"t{rng.randrange(20)}"
+            op = rng.random()
+            if op < 0.4:
+                ms.log_once(p, t, Vote.VOTE_YES, writer=p)
+            elif op < 0.7:
+                # One decision per TXN id (atomic commit): every slot of a
+                # txn terminates the same way, as the protocols guarantee.
+                d = Vote.COMMIT if int(t[1:]) % 2 else Vote.ABORT
+                got = ms.log(p, t, d, writer=p)
+                decided.setdefault((p, t), got)
+            elif op < 0.8:
+                ms.gc_pass()
+            else:
+                ms.read_state(p, t)
+            for k, want in decided.items():
+                assert ms.read_state(*k) == want, (seed, step, k)
+        ms.gc_pass()
+        for k, want in decided.items():
+            assert ms.read_state(*k) == want
+            assert ms.log_once(*k, Vote.VOTE_YES, writer="z") == want
+
+
+if HAS_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 19),
+                              st.integers(0, 99)),
+                    min_size=1, max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def test_prop_gc_never_loses_decisions(ops):
+        ms = MemoryStore(lifecycle=LifecycleConfig(checksums=True, gc=True))
+        decided = {}
+        for pi, ti, r in ops:
+            p, t = f"p{pi}", f"t{ti}"
+            if r < 40:
+                ms.log_once(p, t, Vote.VOTE_YES, writer=p)
+            elif r < 70:
+                d = Vote.COMMIT if ti % 2 else Vote.ABORT
+                decided.setdefault((p, t), ms.log(p, t, d, writer=p))
+            else:
+                ms.gc_pass()
+        ms.gc_pass()
+        for k, want in decided.items():
+            assert ms.read_state(*k) == want
+            assert ms.log_once(*k, Vote.VOTE_YES, writer="z") == want

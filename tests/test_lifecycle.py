@@ -1,0 +1,229 @@
+"""Durable-state lifecycle: record framing, crash-consistency, quarantine.
+
+Covers the CRC32 record format (torn tail vs. bit-rot classification, typed
+`CorruptRecord` results), the `FileStore` crash-consistency fixes (a
+zero-length / truncated state file reads as absent instead of raising, a
+writer killed mid-`log`/`put_data` leaves no orphan temp files behind after
+the startup sweep), per-volume quarantine counting, and the truncation
+tombstone that keeps a late terminator from re-claiming a GC'd slot.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import Vote
+from repro.core.lifecycle import (CorruptRecord, LifecycleConfig,
+                                  RECORD_MAGIC, decode_record, encode_record)
+from repro.core.storage import FileStore, MemoryStore
+
+
+# ---------------------------------------------------------------------------
+# Record framing
+# ---------------------------------------------------------------------------
+def test_frame_round_trip():
+    blob = encode_record(Vote.VOTE_YES.value, "n2")
+    assert blob.startswith(RECORD_MAGIC)
+    assert decode_record(blob) == (Vote.VOTE_YES.value, "n2")
+
+
+def test_torn_tail_classified_torn():
+    blob = encode_record(Vote.COMMIT.value, "n0")
+    for cut in (1, 3, len(blob) - len(RECORD_MAGIC) - 1):
+        rec = decode_record(blob[:-cut], "p", "t")
+        assert isinstance(rec, CorruptRecord)
+        assert rec.torn, f"cut={cut} should classify as torn"
+
+
+def test_bit_rot_classified_rot_not_torn():
+    blob = bytearray(encode_record(Vote.COMMIT.value, "n0"))
+    # Flip a body byte (past the header newline) — full length, bad CRC.
+    body_start = blob.index(b"\n") + 1
+    blob[body_start] ^= 0x40
+    rec = decode_record(bytes(blob), "p", "t")
+    assert isinstance(rec, CorruptRecord)
+    assert not rec.torn
+    assert not rec.is_decision()
+    assert rec.value == "CORRUPT"
+
+
+def test_empty_and_garbage_blobs_are_torn():
+    for blob in (b"", b"crc1", b"crc1 zz zz\nxx", b"not a frame"):
+        rec = decode_record(blob)
+        assert isinstance(rec, CorruptRecord) and rec.torn
+
+
+def test_lifecycle_config_coerce():
+    assert LifecycleConfig.coerce(None) is None
+    lc = LifecycleConfig.coerce(dict(gc=True, gc_interval_ms=10.0))
+    assert lc.gc and lc.gc_interval_ms == 10.0 and lc.checksums
+    assert LifecycleConfig.coerce(lc) is lc
+    assert LifecycleConfig.coerce(lc.to_dict()).gc
+    with pytest.raises(TypeError):
+        LifecycleConfig.coerce(42)
+
+
+# ---------------------------------------------------------------------------
+# FileStore crash consistency
+# ---------------------------------------------------------------------------
+def test_zero_length_state_file_reads_absent(tmp_path):
+    """Regression: a torn create used to raise IndexError from _read."""
+    fs = FileStore(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "state", "p0"), exist_ok=True)
+    open(os.path.join(str(tmp_path), "state", "p0", "t0"), "wb").close()
+    assert fs.read_state("p0", "t0") is None
+    assert fs.torn_records >= 1
+    # The slot is claimable: LogOnce treats the torn create as absent.
+    assert fs.log_once("p0", "t0", Vote.VOTE_YES, writer="p0") \
+        == Vote.VOTE_YES
+
+
+def test_truncated_framed_file_reads_absent(tmp_path):
+    fs = FileStore(str(tmp_path),
+                   lifecycle=LifecycleConfig(checksums=True))
+    assert fs.log_once("p0", "t1", Vote.VOTE_YES, writer="p0") \
+        == Vote.VOTE_YES
+    path = os.path.join(str(tmp_path), "state", "p0", "t1")
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[:-2])
+    assert fs.read_state("p0", "t1") is None
+    assert fs.torn_records >= 1
+
+
+def test_bit_rot_reads_as_typed_corrupt_record(tmp_path):
+    fs = FileStore(str(tmp_path),
+                   lifecycle=LifecycleConfig(checksums=True))
+    fs.log("p0", "t2", Vote.COMMIT, writer="p0")
+    path = os.path.join(str(tmp_path), "state", "p0", "t2")
+    blob = bytearray(open(path, "rb").read())
+    blob[blob.index(b"\n") + 1] ^= 0x01
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    rec = fs.read_state("p0", "t2")
+    assert isinstance(rec, CorruptRecord) and not rec.torn
+    assert fs.corrupt_records == 1
+    assert fs.scrub() == [path]        # scrub reports the rotted path
+
+
+def test_repeated_rot_trips_quarantine(tmp_path):
+    fs = FileStore(str(tmp_path),
+                   lifecycle=LifecycleConfig(checksums=True,
+                                             quarantine_threshold=3))
+    for i in range(3):
+        fs.log("p0", f"q{i}", Vote.COMMIT, writer="p0")
+        path = os.path.join(str(tmp_path), "state", "p0", f"q{i}")
+        blob = bytearray(open(path, "rb").read())
+        blob[blob.index(b"\n") + 1] ^= 0x01
+        with open(path, "wb") as f:
+            f.write(bytes(blob))
+        fs.read_state("p0", f"q{i}")
+    assert fs.corrupt_records == 3
+    assert fs.quarantines == 1
+
+
+def test_orphan_tmp_files_swept_on_startup(tmp_path):
+    sdir = os.path.join(str(tmp_path), "state", "p0")
+    ddir = os.path.join(str(tmp_path), "data", "p0")
+    os.makedirs(sdir)
+    os.makedirs(ddir)
+    for d in (sdir, ddir):
+        with open(os.path.join(d, "x.tmp.123.456"), "wb") as f:
+            f.write(b"partial")
+    fs = FileStore(str(tmp_path))
+    assert fs.orphans_swept == 2
+    assert not [p for p in os.listdir(sdir) if ".tmp." in p]
+    assert not [p for p in os.listdir(ddir) if ".tmp." in p]
+
+
+_KILL_SCRIPT = textwrap.dedent("""\
+    import os, sys, threading
+    sys.path.insert(0, {src!r})
+    from repro.core import Vote
+    from repro.core.storage import FileStore
+
+    root = {root!r}
+    fs = FileStore(root)
+    # Patch the atomic-replace fsync to signal readiness then hang, so the
+    # parent can SIGKILL us with the temp file guaranteed on disk.
+    real_fsync = os.fsync
+    def hang(fd):
+        real_fsync(fd)
+        print("READY", flush=True)
+        threading.Event().wait()
+    os.fsync = hang
+    if {mode!r} == "log":
+        fs.log("p0", "victim", Vote.COMMIT, writer="p0")
+    else:
+        fs.put_data("p0", "shard", b"x" * 128)
+""")
+
+
+@pytest.mark.parametrize("mode", ["log", "put_data"])
+def test_writer_killed_mid_write_leaves_no_orphans(tmp_path, mode):
+    """Kill -9 a writer while its temp file exists; a fresh FileStore on
+    the same root must sweep the orphan and read the volume cleanly."""
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    script = _KILL_SCRIPT.format(src=src, root=str(tmp_path), mode=mode)
+    proc = subprocess.Popen([sys.executable, "-c", script],
+                            stdout=subprocess.PIPE)
+    assert proc.stdout.readline().strip() == b"READY"
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait()
+    leftovers = []
+    for dirpath, _dirs, files in os.walk(str(tmp_path)):
+        leftovers += [f for f in files if ".tmp." in f]
+    assert leftovers, "test rig failed to strand a temp file"
+    fs = FileStore(str(tmp_path))
+    assert fs.orphans_swept == len(leftovers)
+    for dirpath, _dirs, files in os.walk(str(tmp_path)):
+        assert not [f for f in files if ".tmp." in f]
+    # The interrupted write never reached its final path: absent, claimable.
+    assert fs.read_state("p0", "victim") is None
+
+
+# ---------------------------------------------------------------------------
+# Truncation tombstones (MemoryStore; the sim stores delegate to it)
+# ---------------------------------------------------------------------------
+def test_gc_tombstone_blocks_late_terminator():
+    ms = MemoryStore(lifecycle=LifecycleConfig(checksums=True, gc=True))
+    ms.log_once("p0", "t", Vote.VOTE_YES, writer="p0")
+    ms.log("p0", "t", Vote.COMMIT, writer="p0")
+    assert ms.gc_pass() == 1
+    assert ms.gc_log[0].decision == Vote.COMMIT.value
+    # The slot is gone from the state map but a late CAS must NOT claim it.
+    assert ms.log_once("p0", "t", Vote.ABORT, writer="n9") == Vote.COMMIT
+    assert ms.read_state("p0", "t") == Vote.COMMIT
+    assert ms.is_truncated(("p0", "t"))
+
+
+def test_gc_refuses_unsettled_prefix():
+    ms = MemoryStore(lifecycle=LifecycleConfig(checksums=True, gc=True))
+    ms.log_once("p0", "a", Vote.VOTE_YES, writer="p0")   # in doubt
+    ms.log_once("p0", "b", Vote.COMMIT, writer="p0")     # settled
+    assert ms.gc_pass() == 0       # 'a' blocks the prefix
+    assert ms.watermark_lag() == 2
+    ms.log("p0", "a", Vote.ABORT, writer="p0")
+    assert ms.gc_pass() == 2
+    assert ms.watermark_lag() == 0
+
+
+def test_decision_never_flips_in_log():
+    """A zombie re-issue must not make a slot serve both terminal values."""
+    ms = MemoryStore()
+    assert ms.log("p0", "t", Vote.COMMIT, writer="p0") == Vote.COMMIT
+    assert ms.log("p0", "t", Vote.ABORT, writer="p0") == Vote.COMMIT
+    assert ms.read_state("p0", "t") == Vote.COMMIT
+
+
+def test_decision_never_flips_in_filestore_log(tmp_path):
+    fs = FileStore(str(tmp_path))
+    assert fs.log("p0", "t", Vote.ABORT, writer="p0") == Vote.ABORT
+    assert fs.log("p0", "t", Vote.COMMIT, writer="p0") == Vote.ABORT
+    assert fs.read_state("p0", "t") == Vote.ABORT
